@@ -1,0 +1,76 @@
+"""Shared benchmark utilities: timing, tiny-config factories, workloads.
+
+CPU-scale note: every benchmark uses a reduced PLM (2L x 64d) and a small
+synthetic corpus so wall-clock ratios are measurable in seconds; the
+*relative* module speedups are the reproduction target (paper Table 4),
+absolute times are CPU artifacts. Roofline-grade numbers come from the
+dry-run (benchmarks/roofline_table.py reads results/dryrun_full.jsonl).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core, data, optim
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
+    """Median wall time per call (seconds) of a jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def bench_cfg(**over):
+    base = dict(vocab=5000, n_layers=2, d_model=64, n_heads=4, d_ff=128,
+                n_segments=3, seg_len=16, news_dim=32, n_news=1201,
+                gamma=20, beta=2e-2, encode_budget=128, batch_users=16,
+                hist_len=30, merged_cap=384, n_neg=4)
+    base.update(over)
+    return core.make_config(**base)
+
+
+def bench_corpus(cfg, *, n_news=1200, n_users=300, seed=0):
+    rng = np.random.default_rng(seed)
+    corpus = data.make_corpus(rng, n_news=n_news)
+    log = data.make_click_log(rng, corpus, n_users=n_users,
+                              max_hist=cfg.hist_len)
+    stats = data.build_corpus_stats(
+        [corpus.text(i) for i in range(corpus.n_news)])
+    lcfg = data.LoaderConfig(vocab=cfg.plm.vocab,
+                             n_segments=cfg.plm.n_segments,
+                             seg_len=cfg.plm.seg_len,
+                             buckets=(cfg.plm.seg_len // 2, cfg.plm.seg_len),
+                             token_budget=6000, b_cap=cfg.batch_users,
+                             m_cap=cfg.merged_cap, hist_len=cfg.hist_len)
+    store = data.NewsStore(corpus, stats, lcfg)
+    return corpus, log, stats, lcfg, store
+
+
+def centralized_batch_from_log(cfg, log, store, lcfg, *, seed=0):
+    insts = [h for h in log.histories if len(h) >= 2][:cfg.batch_users]
+    return data.build_centralized_batch(insts, store, lcfg, cfg.plm.seg_len)
+
+
+def conventional_batch_from_log(cfg, log, store, lcfg, *, n_users=None,
+                                seed=0):
+    n = n_users or cfg.batch_users
+    insts = [h for h in log.histories if len(h) >= 2][:n]
+    return data.build_conventional_batch(
+        insts, store, lcfg, rng=np.random.default_rng(seed))
+
+
+def as_device(batch):
+    batch = dict(batch)
+    batch.pop("_stats", None)
+    return {k: jnp.asarray(v) for k, v in batch.items()}

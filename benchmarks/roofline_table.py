@@ -1,0 +1,66 @@
+"""Roofline table from the dry-run artifacts (results/dryrun_full.jsonl).
+
+Derived columns (per arch x shape x mesh): the three roofline terms in ms,
+the dominant bottleneck, MODEL_FLOPS / HLO_FLOPs (useful-compute fraction),
+and the MFU upper bound implied by max(terms).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_full.jsonl")
+
+
+def load(path=RESULTS):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") == "ok":
+                recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def run():
+    rows = []
+    recs = load()
+    if not recs:
+        return [("roofline/missing_dryrun_results", 0.0, 0.0)]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        tag = f"roofline/{arch}/{shape}@{mesh}"
+        step_ms = r["step_time_lb"] * 1e3
+        rows.append((f"{tag}/t_compute_ms", step_ms * 1e3,
+                     round(r["t_compute"] * 1e3, 3)))
+        rows.append((f"{tag}/t_memory_ms", 0.0,
+                     round(r["t_memory"] * 1e3, 3)))
+        rows.append((f"{tag}/t_collective_ms", 0.0,
+                     round(r["t_collective"] * 1e3, 3)))
+        rows.append((f"{tag}/bottleneck={r['bottleneck']}", 0.0,
+                     round(r["useful_flops_fraction"], 4)))
+        rows.append((f"{tag}/mfu_upper_bound", 0.0,
+                     round(r["mfu_upper_bound"], 4)))
+    return rows
+
+
+def summary_table(path=RESULTS):
+    """Markdown table for EXPERIMENTS.md."""
+    recs = load(path)
+    lines = ["| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | "
+             "bound | useful FLOPs | MFU ub | peak GiB |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['bottleneck']} | {r['useful_flops_fraction']:.1%} | "
+            f"{r['mfu_upper_bound']:.1%} | "
+            f"{r['peak_memory_per_chip']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summary_table())

@@ -1,0 +1,116 @@
+"""Paper Table 4 — module-wise training speedup.
+
+Measures wall-clock cost *per click prediction* for the ladder:
+  conventional            per-instance encoding, 1 prediction / instance
+  + central/batch         deduplicated merged-set encoding (data efficiency)
+  + cache                 fixed encode budget E < M (cache absorbs the rest)
+  + autoregressive        L-1 predictions per user from one encode pass
+  + BusLM                 segmented O(N^2/K) encoding vs single sequence
+
+Paper reference factors: Central+Batch 3.0x, Cache 1.98x, AR 17x,
+BusLM 1.27x, overall 128.7x (V100 scale; CPU-tiny ratios differ but the
+ordering and multiplicativity are the reproduction target).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core, optim
+from repro.configs.speedyfeed_arch import SF_OPT, make_sf_train_step
+from .common import (as_device, bench_cfg, bench_corpus,
+                     centralized_batch_from_log, conventional_batch_from_log,
+                     time_fn)
+
+
+def run():
+    rows = []
+    cfg = bench_cfg()
+    corpus, log, stats, lcfg, store = bench_corpus(cfg)
+    key = jax.random.PRNGKey(0)
+
+    # ---- (a) conventional: encode every history slot per instance
+    conv = as_device(conventional_batch_from_log(cfg, log, store, lcfg))
+    params, cache = core.speedyfeed_state(cfg, key)
+    opt = optim.adam_init(params)
+    conv_step = jax.jit(optim.make_train_step(
+        lambda p, b: core.conventional_forward(p, cfg, b), SF_OPT))
+    t_conv = time_fn(lambda: conv_step(params, opt, conv))
+    clicks_conv = cfg.batch_users
+    cost_conv = t_conv / clicks_conv
+    rows.append(("speedup/conventional_us_per_click", cost_conv * 1e6, 1.0))
+
+    # ---- (b) + centralized encoding (dedup, no cache, single prediction)
+    cen_raw = centralized_batch_from_log(cfg, log, store, lcfg)
+    n_unique = cen_raw["_stats"]["n_unique"]
+    cen = as_device(cen_raw)
+
+    def central_loss(p, b):
+        # encode merged set once, predict ONLY the last click per user
+        emb = core.buslm_encode(p["plm"], cfg.plm, b["news_tokens"],
+                                b["news_freq"])
+        emb = emb * (b["news_ids"] != 0)[:, None]
+        theta = emb[b["hist_inv"]]
+        mask = b["hist_mask"]
+        mu = core.attentive_user(p["user"], theta, mask)[:, None, :]
+        mu = jnp.broadcast_to(mu, theta.shape)
+        neg = core.sample_negatives(jax.random.PRNGKey(0), cfg.merged_cap,
+                                    mask[:, 1:].shape, cfg.n_neg)
+        # keep only the final transition per user
+        last = mask.sum(1) - 1
+        lmask = jnp.arange(mask.shape[1] - 1)[None, :] == (last - 1)[:, None]
+        loss, m = core.ar_loss(mu, theta, mask & jnp.pad(
+            lmask, ((0, 0), (1, 0)), constant_values=True), emb,
+            b["news_ids"], neg, hist_inv=b["hist_inv"])
+        return loss, m
+
+    central_step = jax.jit(optim.make_train_step(central_loss, SF_OPT))
+    t_central = time_fn(lambda: central_step(params, opt, cen))
+    cost_central = t_central / cfg.batch_users
+    rows.append(("speedup/central_batch_factor", t_central * 1e6,
+                 cost_conv / cost_central))
+
+    # ---- (c) + cache (fixed encode budget; warm cache)
+    sf_step = jax.jit(make_sf_train_step(cfg))
+    state = (params, opt, core.init_cache(cfg.cache))
+    p2, o2, c2 = state
+    for i in range(4):   # warm the cache + p_t
+        p2, o2, c2, _ = sf_step(p2, o2, c2, jnp.int32(100 + i),
+                                jax.random.fold_in(key, i), cen)
+    t_speedy = time_fn(lambda: sf_step(p2, o2, c2, jnp.int32(200),
+                                       jax.random.fold_in(key, 99), cen))
+    clicks_ar = cfg.batch_users * (cfg.hist_len - 1)
+    cost_speedy = t_speedy / clicks_ar
+
+    # cache factor in isolation: encode budget vs full merged set
+    enc_full = jax.jit(lambda t, f: core.buslm_encode(params["plm"], cfg.plm,
+                                                      t, f))
+    t_enc_full = time_fn(lambda: enc_full(cen["news_tokens"],
+                                          cen["news_freq"]))
+    E = cfg.cache.encode_budget
+    t_enc_budget = time_fn(lambda: enc_full(cen["news_tokens"][:E],
+                                            cen["news_freq"][:E]))
+    rows.append(("speedup/cache_encode_factor", t_enc_budget * 1e6,
+                 t_enc_full / t_enc_budget))
+
+    # ---- (d) autoregressive factor: clicks per encode pass
+    rows.append(("speedup/autoregressive_us_per_click", cost_speedy * 1e6,
+                 cost_central / cost_speedy))
+
+    # ---- (e) BusLM: K=3 segmented vs single-sequence encoding
+    cfg1 = bench_cfg(n_segments=1, seg_len=48)
+    p1, _ = core.speedyfeed_state(cfg1, key)
+    toks1 = jax.random.randint(key, (128, 1, 48), 1, cfg.plm.vocab)
+    enc1 = jax.jit(lambda t: core.buslm_encode(p1["plm"], cfg1.plm, t))
+    t_k1 = time_fn(lambda: enc1(toks1))
+    toks3 = jax.random.randint(key, (128, 3, 16), 1, cfg.plm.vocab)
+    enc3 = jax.jit(lambda t: core.buslm_encode(params["plm"], cfg.plm, t))
+    t_k3 = time_fn(lambda: enc3(toks3))
+    rows.append(("speedup/buslm_factor", t_k3 * 1e6, t_k1 / t_k3))
+
+    overall = cost_conv / cost_speedy
+    rows.append(("speedup/overall_vs_conventional", t_speedy * 1e6, overall))
+    return rows

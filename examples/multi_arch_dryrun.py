@@ -1,0 +1,22 @@
+"""Lower + compile any assigned architecture cell on the production mesh.
+
+  PYTHONPATH=src python examples/multi_arch_dryrun.py --arch dbrx-132b \
+      --shape train_4k --multi-pod
+
+Prints the per-device memory analysis and the three roofline terms. This is
+a thin veneer over repro.launch.dryrun (which sets the 512-device XLA flag
+before importing jax — do not import jax before it).
+"""
+import argparse
+import runpy
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    sys.argv = ["dryrun", "--arch", args.arch, "--shape", args.shape,
+                "--mesh", "multi" if args.multi_pod else "single"]
+    runpy.run_module("repro.launch.dryrun", run_name="__main__")

@@ -1,0 +1,41 @@
+"""End-to-end driver: train a ~100M-parameter-class SpeedyFeed recommender
+for a few hundred steps with checkpointing and fault-tolerant restart.
+
+  PYTHONPATH=src python examples/train_news_recommender.py [--steps 200]
+
+The config is the paper's production architecture scaled to fit CPU wall
+clock (4 layers x 256 d instead of 12 x 768 — pass --full for the real
+PLM scale if you have the budget). Resume by re-running with the same
+--ckpt-dir after interrupting.
+"""
+import argparse
+
+from repro.launch.train import (small_speedyfeed_config, train_speedyfeed)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/speedyfeed_ckpt")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 12L x 768d UniLM config")
+    args = ap.parse_args()
+
+    if args.full:
+        cfg = small_speedyfeed_config(
+            n_layers=12, d_model=768, n_heads=12, d_ff=3072, seg_len=32,
+            news_dim=768, encode_budget=256, merged_cap=512)
+    else:
+        cfg = small_speedyfeed_config(n_layers=4, d_model=256, n_heads=8,
+                                      d_ff=512, news_dim=64)
+    res = train_speedyfeed(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=50, cfg=cfg)
+    print(f"\ntrained {res.steps_done} steps in {res.wall_seconds:.0f}s"
+          + (f" (resumed from step {res.resumed_from})"
+             if res.resumed_from else ""))
+    print(f"loss: {res.losses[0]:.3f} -> {res.losses[-1]:.3f}; "
+          f"final ar_acc={res.metrics.get('ar_acc', 0):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .ckpt import (AsyncCheckpointer, latest_step, restore, restore_sharded,
+                   save)

@@ -1,0 +1,114 @@
+"""Config/registry substrate: every assigned architecture exposes a set of
+(shape -> Cell) entries with a uniform interface used by the dry-run, the
+benchmarks and the launchers.
+
+A Cell packages:
+  kind            train | prefill | decode | serve | retrieval
+  make_fn(mesh)   the jittable step function (mesh threaded for shard_map)
+  abstract_args(mesh)  ShapeDtypeStructs *with shardings attached* for every
+                  argument — lower()/compile() never allocates memory
+  activation_specs(mesh)  named activation constraints (e.g. sequence
+                  parallelism on the residual stream)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.distributed import sharding as shx
+
+I32 = jnp.int32
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    make_fn: Callable          # (mesh) -> step fn
+    abstract_args: Callable    # (mesh) -> tuple of arg trees (SDS w/ sharding)
+    activation_specs: Callable = lambda mesh: {}
+    skip: Optional[str] = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}/{self.shape}"
+
+
+@dataclasses.dataclass
+class Arch:
+    name: str
+    family: str
+    config: object
+    cells: dict
+    smoke: Callable            # () -> metrics dict (reduced-config CPU test)
+    notes: str = ""
+
+
+def sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None or spec is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def shard_abstract(abs_tree, spec_tree, mesh):
+    """Attach NamedShardings to an abstract (eval_shape) pytree."""
+    if mesh is None:
+        return abs_tree
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(
+            l.shape, l.dtype, sharding=NamedSharding(mesh, s)),
+        abs_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_params(init_fn):
+    return jax.eval_shape(lambda: init_fn(jax.random.PRNGKey(0)))
+
+
+def abstract_opt(params_abs):
+    return jax.eval_shape(optim.adam_init, params_abs)
+
+
+def opt_spec_tree(params_spec):
+    return {"m": params_spec, "v": params_spec, "count": P()}
+
+
+def data_axes(mesh):
+    return tuple(a for a in shx.DATA_AXES if a in mesh.axis_names) \
+        if mesh is not None else ()
+
+
+def batch_sds(mesh, tree_shapes):
+    """{name: (shape, dtype)} -> SDS dict sharded on dim0 over data axes."""
+    out = {}
+    for k, (shape, dtype) in tree_shapes.items():
+        spec = P(data_axes(mesh)) if mesh is not None else None
+        if mesh is not None:
+            spec = P(*([data_axes(mesh)] + [None] * (len(shape) - 1)))
+        out[k] = sds(shape, dtype, mesh, spec)
+    return out
+
+
+def finite_metrics(metrics) -> dict:
+    out = {}
+    for k, v in metrics.items():
+        v = jax.device_get(v)
+        out[k] = float(v) if getattr(v, "ndim", 0) == 0 else v
+    return out
+
+
+def assert_finite(tree, what=""):
+    for leaf in jax.tree.leaves(tree):
+        arr = jax.device_get(leaf)
+        if arr.dtype.kind == "f" and not bool(jnp.isfinite(arr).all()):
+            raise AssertionError(f"non-finite values in {what}")

@@ -1,0 +1,162 @@
+"""DimeNet (1 assigned arch x 4 graph shapes).
+
+Shapes: full_graph_sm (Cora-scale full batch), minibatch_lg (Reddit-scale
+fanout-sampled subgraph; the neighbor sampler lives in data/graph.py),
+ogb_products (full-batch large), molecule (128 batched small graphs —
+DimeNet's native regime).
+
+Triplet budgets: the directional interaction is O(sum_j deg_j^2); each shape
+carries an explicit triplet cap T (host sampler fills up to T, extra triplets
+are dropped and counted — DESIGN.md §6 capacity-knob note).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.distributed import sharding as shx
+from repro.models.gnn import dimenet
+from .base import (Arch, Cell, F32, I32, abstract_opt, abstract_params,
+                   assert_finite, opt_spec_tree, sds, shard_abstract)
+
+def _pad512(x: int) -> int:
+    """Edge/triplet arrays shard over up to 512 devices -> pad (mask'd)."""
+    return -(-x // 512) * 512
+
+
+GNN_SHAPES = {
+    # n, e, t: real sizes; e/t arrays are padded to /512 (edge_mask covers)
+    "full_graph_sm": dict(kind="train", n=2708, e=_pad512(10556), t=32768,
+                          d_feat=1433, n_classes=7, e_real=10556),
+    "minibatch_lg": dict(kind="train", n=169984, e=_pad512(168960), t=262144,
+                         d_feat=602, n_classes=41, seeds=1024, e_real=168960),
+    "ogb_products": dict(kind="train", n=2449029, e=_pad512(61859140),
+                         t=_pad512(61859140), d_feat=100, n_classes=47,
+                         e_real=61859140),
+    "molecule": dict(kind="train", n=3840, e=8192, t=16384, graph_level=True,
+                     n_graphs=128),
+}
+
+GNN_OPT = optim.AdamConfig(lr=1e-3, grad_clip=1.0)
+
+DIMENET = dimenet.DimeNetConfig(
+    name="dimenet", n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7,
+    n_radial=6)
+
+
+def _cfg_for(shp) -> dimenet.DimeNetConfig:
+    import dataclasses as dc
+    if shp.get("graph_level"):
+        return DIMENET
+    return dc.replace(DIMENET, d_feat=shp["d_feat"],
+                      out_dim=shp["n_classes"], node_level=True)
+
+
+def _batch_abs(shp, mesh):
+    n, e, t = shp["n"], shp["e"], shp["t"]
+    all_axes = tuple(mesh.axis_names) if mesh is not None else None
+    edge = lambda shape, dt: sds(shape, dt, mesh,
+                                 P(*([all_axes] + [None] * (len(shape) - 1)))
+                                 if mesh else None)
+    node = lambda shape, dt: sds(shape, dt, mesh,
+                                 P(*([None] * len(shape))) if mesh else None)
+    b = {
+        "pos": node((n, 3), F32),
+        "edge_src": edge((e,), I32),
+        "edge_dst": edge((e,), I32),
+        "edge_mask": edge((e,), jnp.bool_),
+        "trip_kj": edge((t,), I32),
+        "trip_ji": edge((t,), I32),
+        "trip_mask": edge((t,), jnp.bool_),
+    }
+    if shp.get("graph_level"):
+        b["z"] = node((n,), I32)
+        b["graph_id"] = node((n,), I32)
+        b["targets"] = node((shp["n_graphs"],), F32)
+    else:
+        b["feat"] = node((n, shp["d_feat"]), F32)
+        b["labels"] = node((n,), I32)
+        b["label_mask"] = node((n,), jnp.bool_)
+    return b
+
+
+def _gnn_flops(cfg, shp):
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    nsbf = cfg.n_spherical * cfg.n_radial
+    e, t = shp["e"], shp["t"]
+    per_block = 2 * e * d * d * 4 + 2 * t * nsbf * d * nb + 2 * t * nsbf * nsbf
+    return 3 * cfg.n_blocks * per_block     # train = fwd + bwd
+
+
+def _arch() -> Arch:
+    cells = {}
+    for shape, shp in GNN_SHAPES.items():
+        cfg = _cfg_for(shp)
+        ng = shp.get("n_graphs", 1)
+
+        def make_fn(mesh, cfg=cfg, ng=ng):
+            return optim.make_train_step(
+                lambda p, b: dimenet.loss(p, cfg, b, n_graphs=ng), GNN_OPT)
+
+        def args(mesh, cfg=cfg, shp=shp):
+            pa = abstract_params(lambda k: dimenet.init(k, cfg))
+            oa = abstract_opt(pa)
+            if mesh is not None:
+                specs = shx.spec_tree(pa, shx.gnn_rules())
+                pa = shard_abstract(pa, specs, mesh)
+                oa = shard_abstract(oa, opt_spec_tree(specs), mesh)
+            return (pa, oa, _batch_abs(shp, mesh))
+
+        cells[shape] = Cell(arch="dimenet", shape=shape, kind="train",
+                            make_fn=make_fn, abstract_args=args,
+                            meta={"model_flops": _gnn_flops(cfg, shp)})
+    return Arch(name="dimenet", family="gnn", config=DIMENET, cells=cells,
+                smoke=_smoke,
+                notes="triplet-gather regime; message passing via "
+                      "take + segment_sum; SpeedyFeed core inapplicable "
+                      "(DESIGN.md §5)")
+
+
+def _smoke():
+    from repro.data.graph import random_molecule_batch, build_triplets
+    key = jax.random.PRNGKey(0)
+    import dataclasses as dc
+    small = dc.replace(DIMENET, n_blocks=2, d_hidden=32, n_bilinear=4,
+                       n_spherical=3, n_radial=3)
+    batch = random_molecule_batch(np.random.default_rng(0), n_graphs=4,
+                                  nodes_per_graph=8, t_cap=256)
+    step = optim.make_train_step(
+        lambda p, b: dimenet.loss(p, small, b, n_graphs=4), GNN_OPT)
+    params = dimenet.init(key, small)
+    params, _, metrics = jax.jit(step)(params, optim.adam_init(params), batch)
+    assert_finite(metrics["loss"], "dimenet loss")
+    # node-level mode
+    small_n = dc.replace(small, d_feat=16, out_dim=5, node_level=True)
+    pn = dimenet.init(key, small_n)
+    rng = np.random.default_rng(1)
+    n, e = 32, 96
+    src = rng.integers(0, n, e)
+    dst = (src + 1 + rng.integers(0, n - 1, e)) % n
+    kj, ji, tm = build_triplets(src, dst, t_cap=256)
+    bn = {"feat": jnp.asarray(rng.normal(size=(n, 16)), jnp.float32),
+          "pos": jnp.asarray(rng.normal(size=(n, 3)) * 2, jnp.float32),
+          "edge_src": jnp.asarray(src, jnp.int32),
+          "edge_dst": jnp.asarray(dst, jnp.int32),
+          "edge_mask": jnp.ones((e,), bool),
+          "trip_kj": jnp.asarray(kj, jnp.int32),
+          "trip_ji": jnp.asarray(ji, jnp.int32),
+          "trip_mask": jnp.asarray(tm, bool),
+          "labels": jnp.asarray(rng.integers(0, 5, n), jnp.int32),
+          "label_mask": jnp.ones((n,), bool)}
+    l, m = dimenet.loss(pn, small_n, bn)
+    assert_finite(l, "dimenet node loss")
+    return {"loss": float(metrics["loss"]), "node_loss": float(l)}
+
+
+def archs():
+    return [_arch()]

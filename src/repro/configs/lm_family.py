@@ -1,0 +1,210 @@
+"""LM-family architectures (5 assigned archs x 4 shapes).
+
+Shapes: train_4k (train_step), prefill_32k (prefill), decode_32k /
+long_500k (serve_step: one token against a KV cache). long_500k runs only
+for the sub-quadratic arch (llama4-scout, chunked-local iRoPE); the pure
+full-attention archs carry a documented skip (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.distributed import sharding as shx
+from repro.models import lm
+from .base import (Arch, Cell, I32, abstract_opt, abstract_params,
+                   assert_finite, batch_sds, data_axes, opt_spec_tree, sds,
+                   shard_abstract)
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+TRAIN_OPT = optim.AdamConfig(lr=3e-4, weight_decay=0.1, grad_clip=1.0)
+
+
+def _params_abs(cfg, mesh, fsdp):
+    pa = abstract_params(lambda k: lm.init(k, cfg, param_dtype=jnp.bfloat16))
+    if mesh is None:
+        return pa, None
+    specs = shx.spec_tree(pa, shx.lm_rules(fsdp))
+    return shard_abstract(pa, specs, mesh), specs
+
+
+def _make_train(cfg, mesh):
+    loss = lambda p, b: lm.lm_loss(p, cfg, b, mesh=mesh)
+    return optim.make_train_step(loss, TRAIN_OPT,
+                                 optim.linear_warmup_cosine(3e-4, 200, 10000))
+
+
+def _train_args(cfg, fsdp, shp, mesh):
+    pa, specs = _params_abs(cfg, mesh, fsdp)
+    oa = abstract_opt(pa)
+    if mesh is not None:
+        oa = shard_abstract(oa, opt_spec_tree(specs), mesh)
+    batch = batch_sds(mesh, {
+        "tokens": ((shp["batch"], shp["seq"]), I32),
+        "labels": ((shp["batch"], shp["seq"]), I32)})
+    return (pa, oa, batch)
+
+
+def _prefill_args(cfg, fsdp, shp, mesh):
+    pa, _ = _params_abs(cfg, mesh, fsdp)
+    batch = batch_sds(mesh, {"tokens": ((shp["batch"], shp["seq"]), I32)})
+    return (pa, batch["tokens"])
+
+
+def _cache_spec(mesh, long: bool):
+    if mesh is None:
+        return None
+    if long:  # B=1 -> shard the KV sequence over every axis
+        return P(None, None, tuple(mesh.axis_names), None, None)
+    return P(None, data_axes(mesh), "model", None, None)
+
+
+def _decode_args(cfg, fsdp, shp, mesh, long):
+    pa, _ = _params_abs(cfg, mesh, fsdp)
+    ca = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shp["batch"], shp["seq"], jnp.bfloat16))
+    if mesh is not None:
+        cs = jax.tree.map(lambda _: _cache_spec(mesh, long), ca,
+                          is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        ca = shard_abstract(ca, cs, mesh)
+    tok = batch_sds(mesh, {"token": ((shp["batch"], 1), I32)})["token"] \
+        if not long else sds((1, 1), I32, mesh, P(None, None))
+    idx = sds((), I32, mesh, P())
+    return (pa, tok, ca, idx)
+
+
+def _act_specs(cfg, mesh, kind):
+    """Megatron-style sequence parallelism on the residual stream."""
+    if mesh is None or "model" not in mesh.axis_names or kind == "decode":
+        return {}
+    return {"residual": P(data_axes(mesh), "model", None)}
+
+
+def lm_arch(cfg: lm.LMConfig, *, fsdp: bool = True, sub_quadratic: bool = False,
+            notes: str = "") -> Arch:
+    cells = {}
+    for shape, shp in LM_SHAPES.items():
+        kind = shp["kind"]
+        skip = None
+        if shape == "long_500k" and not sub_quadratic:
+            skip = ("pure full-attention arch: long_500k requires "
+                    "sub-quadratic attention (DESIGN.md §5)")
+        if kind == "train":
+            make_fn = functools.partial(_make_train, cfg)
+            args = functools.partial(_train_args, cfg, fsdp, shp)
+            tokens = shp["batch"] * shp["seq"]
+            mf = 6 * cfg.active_param_count() * tokens
+        elif kind == "prefill":
+            make_fn = lambda mesh, cfg=cfg: (
+                lambda p, t: lm.prefill(p, cfg, t, mesh=mesh))
+            args = functools.partial(_prefill_args, cfg, fsdp, shp)
+            mf = 2 * cfg.active_param_count() * shp["batch"] * shp["seq"]
+        else:
+            long = shape == "long_500k"
+            make_fn = lambda mesh, cfg=cfg: (
+                lambda p, t, c, i: lm.decode_step(p, cfg, t, c, i, mesh=mesh))
+            args = functools.partial(_decode_args, cfg, fsdp, shp, long=long)
+            mf = 2 * cfg.active_param_count() * shp["batch"]
+        cells[shape] = Cell(
+            arch=cfg.name, shape=shape, kind=kind, make_fn=make_fn,
+            abstract_args=args,
+            activation_specs=functools.partial(_act_specs, cfg, kind=kind),
+            skip=skip,
+            meta={"model_flops": float(mf),
+                  "params": cfg.param_count(),
+                  "active_params": cfg.active_param_count()})
+    return Arch(name=cfg.name, family="lm", config=cfg, cells=cells,
+                smoke=functools.partial(_smoke, cfg), notes=notes)
+
+
+# ---------------------------------------------------------------------------
+# reduced-config smoke test
+# ---------------------------------------------------------------------------
+
+def reduced_lm(cfg: lm.LMConfig) -> lm.LMConfig:
+    import dataclasses as dc
+    ge = cfg.global_every
+    return dc.replace(
+        cfg, n_layers=ge or 2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+        d_ff=128, vocab=512,
+        n_experts=min(cfg.n_experts, 4), top_k=min(cfg.top_k, 4),
+        chunk_size=8 if cfg.chunk_size else None,
+        moe_impl="gather" if cfg.is_moe else cfg.moe_impl,
+        remat=False, loss_chunk=0, dtype="float32")
+
+
+def _smoke(cfg: lm.LMConfig):
+    r = reduced_lm(cfg)
+    key = jax.random.PRNGKey(0)
+    params = lm.init(key, r)
+    opt = optim.adam_init(params)
+    step = optim.make_train_step(lambda p, b: lm.lm_loss(p, r, b), TRAIN_OPT)
+    toks = jax.random.randint(key, (4, 32), 0, r.vocab)
+    params, opt, metrics = jax.jit(step)(
+        params, opt, {"tokens": toks, "labels": toks})
+    assert_finite(metrics["loss"], f"{cfg.name} train loss")
+    assert_finite(params, f"{cfg.name} params after step")
+    # decode one token
+    cache = lm.init_cache(r, 4, 32, jnp.float32)
+    logits, cache = jax.jit(
+        lambda p, t, c, i: lm.decode_step(p, r, t, c, i))(
+        params, toks[:, :1], cache, jnp.int32(0))
+    assert logits.shape == (4, r.vocab)
+    assert_finite(logits, f"{cfg.name} decode logits")
+    return {"loss": float(metrics["loss"]), "vocab": r.vocab}
+
+
+# ---------------------------------------------------------------------------
+# the five assigned configs (exact dims from the assignment)
+# ---------------------------------------------------------------------------
+
+QWEN3_14B = lm.LMConfig(
+    name="qwen3-14b", n_layers=40, d_model=5120, n_heads=40, n_kv=8,
+    head_dim=128, d_ff=17408, vocab=151936, qk_norm=True, rope_theta=1e6,
+    remat=True, loss_chunk=512)
+
+CHATGLM3_6B = lm.LMConfig(
+    name="chatglm3-6b", n_layers=28, d_model=4096, n_heads=32, n_kv=2,
+    head_dim=128, d_ff=13696, vocab=65024, qkv_bias=True,
+    rope_fraction=0.5, rope_theta=1e4,       # 2D/partial rotary
+    remat=True, loss_chunk=512)
+
+QWEN2_72B = lm.LMConfig(
+    name="qwen2-72b", n_layers=80, d_model=8192, n_heads=64, n_kv=8,
+    head_dim=128, d_ff=29568, vocab=152064, qkv_bias=True, rope_theta=1e6,
+    remat=True, loss_chunk=512)
+
+DBRX_132B = lm.LMConfig(
+    name="dbrx-132b", n_layers=40, d_model=6144, n_heads=48, n_kv=8,
+    head_dim=128, d_ff=10752, vocab=100352, n_experts=16, top_k=4,
+    moe_impl="ep", rope_theta=5e5, remat=True, loss_chunk=512)
+
+LLAMA4_SCOUT = lm.LMConfig(
+    name="llama4-scout-17b-a16e", n_layers=48, d_model=5120, n_heads=40,
+    n_kv=8, head_dim=128, d_ff=8192, vocab=202048, n_experts=16, top_k=1,
+    n_shared_experts=1, moe_impl="ep", chunk_size=8192, global_every=4,
+    rope_theta=5e5, remat=True, loss_chunk=512)
+
+
+def archs():
+    return [
+        lm_arch(QWEN3_14B, notes="GQA kv=8, qk_norm"),
+        lm_arch(CHATGLM3_6B, notes="GQA kv=2, partial (2D) RoPE, QKV bias"),
+        lm_arch(QWEN2_72B, notes="GQA kv=8, QKV bias"),
+        lm_arch(DBRX_132B, notes="MoE 16e top-4 (fine-grained), EP over model axis"),
+        lm_arch(LLAMA4_SCOUT, sub_quadratic=True,
+                notes="MoE 16e top-1 + shared expert; iRoPE chunked-local "
+                      "attention (sub-quadratic) -> long_500k runs. "
+                      "Early-fusion multimodal frontend is a stub: "
+                      "input_specs provide token ids (text backbone only)."),
+    ]

@@ -1,0 +1,290 @@
+"""RecSys architectures (4 assigned archs x 4 shapes).
+
+Shapes: train_batch (B=65 536 train), serve_p99 (B=512 online),
+serve_bulk (B=262 144 offline scoring), retrieval_cand (1 query vs 10^6
+candidates, batched dot + top-k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import optim
+from repro.distributed import sharding as shx
+from repro.models.recsys import bert4rec, ctr
+from repro.models.recsys.common import SparseSpec, criteo_like_vocab
+from .base import (Arch, Cell, F32, I32, abstract_opt, abstract_params,
+                   assert_finite, batch_sds, data_axes, opt_spec_tree, sds,
+                   shard_abstract)
+
+RS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=1_000_000),
+}
+
+RS_OPT = optim.AdamConfig(lr=1e-3, grad_clip=1.0)
+
+
+def _params_abs(init_fn, mesh):
+    pa = abstract_params(init_fn)
+    if mesh is None:
+        return pa, None
+    specs = shx.spec_tree(pa, shx.recsys_rules())
+    return shard_abstract(pa, specs, mesh), specs
+
+
+# ---------------------------------------------------------------------------
+# CTR cells (wide-deep / dlrm / dcn-v2)
+# ---------------------------------------------------------------------------
+
+def _ctr_batch(cfg, B, mesh, with_label=True):
+    F, nnz = cfg.sparse.n_fields, cfg.sparse.nnz
+    shapes = {"sparse_idx": ((B, F, nnz), I32),
+              "sparse_w": ((B, F, nnz), F32)}
+    if cfg.n_dense:
+        shapes["dense"] = ((B, cfg.n_dense), F32)
+    if with_label:
+        shapes["label"] = ((B,), F32)
+    return batch_sds(mesh, shapes)
+
+
+def _ctr_arch(cfg: ctr.CTRConfig, notes="") -> Arch:
+    init_fn = lambda k: ctr.init(k, cfg)
+    d_repr = _ctr_repr_dim(cfg)
+    cells = {}
+    for shape, shp in RS_SHAPES.items():
+        kind = shp["kind"]
+        if kind == "train":
+            def make_fn(mesh, cfg=cfg):
+                return optim.make_train_step(
+                    lambda p, b: ctr.loss(p, cfg, b), RS_OPT)
+
+            def args(mesh, cfg=cfg, B=shp["batch"]):
+                pa, specs = _params_abs(init_fn, mesh)
+                oa = abstract_opt(pa)
+                if mesh is not None:
+                    oa = shard_abstract(oa, opt_spec_tree(specs), mesh)
+                return (pa, oa, _ctr_batch(cfg, B, mesh))
+        elif kind == "serve":
+            def make_fn(mesh, cfg=cfg):
+                return lambda p, b: ctr.forward(p, cfg, b)
+
+            def args(mesh, cfg=cfg, B=shp["batch"]):
+                pa, _ = _params_abs(init_fn, mesh)
+                return (pa, _ctr_batch(cfg, B, mesh, with_label=False))
+        else:
+            def make_fn(mesh, cfg=cfg):
+                return lambda p, b, c: ctr.retrieval(p, cfg, b, c, k=100)
+
+            def args(mesh, cfg=cfg, N=shp["n_cand"]):
+                pa, _ = _params_abs(init_fn, mesh)
+                b = _ctr_batch(cfg, 1, None, with_label=False)
+                # 10^6 candidates shard over the data axes (divisible);
+                # model axis replicates the scoring matmul
+                cand_spec = P(data_axes(mesh), None) if mesh else None
+                cand = sds((N, d_repr), F32, mesh, cand_spec)
+                return (pa, b, cand)
+        emb_rows = cfg.sparse.total_rows
+        cells[shape] = Cell(arch=cfg.name, shape=shape, kind=kind,
+                            make_fn=make_fn, abstract_args=args,
+                            meta={"model_flops": _ctr_flops(cfg, shp),
+                                  "embedding_rows": emb_rows})
+    return Arch(name=cfg.name, family="recsys", config=cfg, cells=cells,
+                smoke=functools.partial(_ctr_smoke, cfg), notes=notes)
+
+
+def _ctr_repr_dim(cfg):
+    F, d = cfg.sparse.n_fields, cfg.sparse.embed_dim
+    if cfg.interaction == "dot":
+        return cfg.bot_mlp[-1] + d
+    return cfg.n_dense + F * d
+
+
+def _mlp_flops(dims, B):
+    return sum(2 * B * a * b for a, b in zip(dims[:-1], dims[1:]))
+
+
+def _ctr_flops(cfg, shp):
+    """Useful-model FLOPs per call (fwd; x3 for train)."""
+    B = shp.get("batch", 1)
+    F, d = cfg.sparse.n_fields, cfg.sparse.embed_dim
+    x0 = cfg.n_dense + F * d
+    f = 0.0
+    if cfg.interaction == "dot":
+        f += _mlp_flops((cfg.n_dense,) + cfg.bot_mlp, B)
+        n_vec = F + 1
+        f += 2 * B * n_vec * n_vec * d
+        f += _mlp_flops((n_vec * (n_vec - 1) // 2 + cfg.bot_mlp[-1],)
+                        + cfg.top_mlp, B)
+    elif cfg.interaction == "cross":
+        f += cfg.n_cross_layers * 2 * B * x0 * x0
+        f += _mlp_flops((x0,) + cfg.mlp_dims, B)
+    else:
+        f += _mlp_flops((x0,) + cfg.mlp_dims + (1,), B)
+    if shp["kind"] == "train":
+        f *= 3
+    if shp["kind"] == "retrieval":
+        f += 2 * shp["n_cand"] * _ctr_repr_dim(cfg)
+    return f
+
+
+def _ctr_smoke(cfg: ctr.CTRConfig):
+    import dataclasses as dc
+    small = dc.replace(cfg, sparse=SparseSpec(
+        n_fields=cfg.sparse.n_fields,
+        vocab_sizes=tuple([97] * cfg.sparse.n_fields),
+        embed_dim=8, nnz=cfg.sparse.nnz),
+        mlp_dims=(32, 16) if cfg.mlp_dims else (),
+        bot_mlp=(16, 8) if cfg.bot_mlp else (),
+        top_mlp=(16, 8, 1) if cfg.top_mlp else ())
+    key = jax.random.PRNGKey(0)
+    params = ctr.init(key, small)
+    B, F, nnz = 32, small.sparse.n_fields, small.sparse.nnz
+    batch = {"sparse_idx": jax.random.randint(key, (B, F, nnz), 0, 97),
+             "sparse_w": jnp.ones((B, F, nnz)),
+             "label": jax.random.bernoulli(key, 0.5, (B,)).astype(jnp.float32)}
+    if small.n_dense:
+        batch["dense"] = jax.random.normal(key, (B, small.n_dense))
+    step = optim.make_train_step(lambda p, b: ctr.loss(p, small, b), RS_OPT)
+    params, _, metrics = jax.jit(step)(params, optim.adam_init(params), batch)
+    assert_finite(metrics["loss"], f"{cfg.name} loss")
+    logits = ctr.forward(params, small, batch)
+    assert logits.shape == (B,)
+    assert_finite(logits, f"{cfg.name} logits")
+    cand = jax.random.normal(key, (64, _ctr_repr_dim(small)))
+    sc, _ = ctr.retrieval(params, small, batch, cand, k=8)
+    assert sc.shape == (B, 8)
+    return {"loss": float(metrics["loss"])}
+
+
+# ---------------------------------------------------------------------------
+# bert4rec cells
+# ---------------------------------------------------------------------------
+
+def _b4r_train_batch(cfg, B, mesh):
+    return batch_sds(mesh, {
+        "tokens": ((B, cfg.seq_len), I32),
+        "mask_pos": ((B, cfg.n_mask), I32),
+        "labels": ((B, cfg.n_mask), I32),
+        "mask_valid": ((B, cfg.n_mask), jnp.bool_),
+        "neg": ((B, cfg.n_mask, cfg.n_neg), I32)})
+
+
+def _b4r_arch(cfg: bert4rec.Bert4RecConfig, notes="") -> Arch:
+    init_fn = lambda k: bert4rec.init(k, cfg)
+    cells = {}
+    for shape, shp in RS_SHAPES.items():
+        kind = shp["kind"]
+        if kind == "train":
+            def make_fn(mesh, cfg=cfg):
+                return optim.make_train_step(
+                    lambda p, b: bert4rec.loss(p, cfg, b), RS_OPT)
+
+            def args(mesh, cfg=cfg, B=shp["batch"]):
+                pa, specs = _params_abs(init_fn, mesh)
+                oa = abstract_opt(pa)
+                if mesh is not None:
+                    oa = shard_abstract(oa, opt_spec_tree(specs), mesh)
+                return (pa, oa, _b4r_train_batch(cfg, B, mesh))
+        elif kind == "serve":
+            def make_fn(mesh, cfg=cfg):
+                if mesh is not None and "model" in mesh.axis_names:
+                    return lambda p, b: bert4rec.serve_sharded(p, cfg, b,
+                                                               mesh, k=100)
+                return lambda p, b: bert4rec.serve(p, cfg, b, k=100)
+
+            def args(mesh, cfg=cfg, B=shp["batch"]):
+                pa, _ = _params_abs(init_fn, mesh)
+                return (pa, batch_sds(mesh, {"tokens": ((B, cfg.seq_len),
+                                                        I32)}))
+        else:
+            def make_fn(mesh, cfg=cfg):
+                return lambda p, b, c: bert4rec.retrieval(p, cfg, b, c, k=100)
+
+            def args(mesh, cfg=cfg, N=shp["n_cand"]):
+                pa, _ = _params_abs(init_fn, mesh)
+                b = {"tokens": sds((1, cfg.seq_len), I32, mesh,
+                                   P(None, None))}
+                cand = sds((N,), I32, mesh,
+                           P(data_axes(mesh)) if mesh else None)
+                return (pa, b, cand)
+        B = shp.get("batch", 1)
+        enc_flops = (cfg.n_blocks
+                     * (8 * cfg.seq_len * cfg.embed_dim ** 2
+                        + 4 * cfg.seq_len ** 2 * cfg.embed_dim
+                        + 4 * cfg.seq_len * cfg.embed_dim * cfg.d_ff)) * B
+        mf = enc_flops * (3 if kind == "train" else 1)
+        if kind == "serve":
+            mf += 2 * B * cfg.n_items * cfg.embed_dim
+        if kind == "retrieval":
+            mf += 2 * shp["n_cand"] * cfg.embed_dim
+        cells[shape] = Cell(arch=cfg.name, shape=shape, kind=kind,
+                            make_fn=make_fn, abstract_args=args,
+                            meta={"model_flops": float(mf)})
+    return Arch(name=cfg.name, family="recsys", config=cfg, cells=cells,
+                smoke=functools.partial(_b4r_smoke, cfg), notes=notes)
+
+
+def _b4r_smoke(cfg):
+    import dataclasses as dc
+    small = dc.replace(cfg, n_items=500, embed_dim=16, seq_len=24, d_ff=32,
+                       n_mask=4, n_neg=8)
+    key = jax.random.PRNGKey(0)
+    params = bert4rec.init(key, small)
+    B = 8
+    batch = {"tokens": jax.random.randint(key, (B, 24), 1, 500),
+             "mask_pos": jax.random.randint(key, (B, 4), 0, 24),
+             "labels": jax.random.randint(key, (B, 4), 1, 500),
+             "mask_valid": jnp.ones((B, 4), bool),
+             "neg": jax.random.randint(key, (B, 4, 8), 1, 500)}
+    step = optim.make_train_step(lambda p, b: bert4rec.loss(p, small, b),
+                                 RS_OPT)
+    params, _, metrics = jax.jit(step)(params, optim.adam_init(params), batch)
+    assert_finite(metrics["loss"], f"{cfg.name} loss")
+    sc, _ = bert4rec.serve(params, small, batch, k=10)
+    assert sc.shape == (B, 10)
+    return {"loss": float(metrics["loss"])}
+
+
+# ---------------------------------------------------------------------------
+# the four assigned configs
+# ---------------------------------------------------------------------------
+
+WIDE_DEEP = ctr.CTRConfig(
+    name="wide-deep",
+    sparse=SparseSpec(n_fields=40, vocab_sizes=criteo_like_vocab(40),
+                      embed_dim=32, nnz=2),
+    n_dense=0, interaction="concat", mlp_dims=(1024, 512, 256), wide=True)
+
+DLRM_RM2 = ctr.CTRConfig(
+    name="dlrm-rm2",
+    sparse=SparseSpec(n_fields=26, vocab_sizes=criteo_like_vocab(26),
+                      embed_dim=64, nnz=1),
+    n_dense=13, interaction="dot", mlp_dims=(),
+    bot_mlp=(512, 256, 64), top_mlp=(512, 512, 256, 1))
+
+DCN_V2 = ctr.CTRConfig(
+    name="dcn-v2",
+    sparse=SparseSpec(n_fields=26, vocab_sizes=criteo_like_vocab(26),
+                      embed_dim=16, nnz=1),
+    n_dense=13, interaction="cross", mlp_dims=(1024, 1024, 512),
+    n_cross_layers=3)
+
+BERT4REC = bert4rec.Bert4RecConfig(
+    name="bert4rec", n_items=3_000_000, embed_dim=64, n_blocks=2, n_heads=2,
+    seq_len=200, d_ff=256, n_mask=40, n_neg=100)
+
+
+def archs():
+    return [
+        _ctr_arch(WIDE_DEEP, notes="wide linear + deep MLP, concat interaction"),
+        _ctr_arch(DLRM_RM2, notes="dot interaction; EmbeddingBag is the hot path"),
+        _b4r_arch(BERT4REC, notes="bidirectional seq rec; the SpeedyFeed-"
+                                  "applicable arch (DESIGN.md §5)"),
+        _ctr_arch(DCN_V2, notes="cross network v2 (full-rank)"),
+    ]

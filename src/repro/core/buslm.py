@@ -1,0 +1,99 @@
+"""BusLM — the paper's economic news encoder (§4.1.3, Appendix A.1.1).
+
+The news article is split into K segments [B, K, S]. Each transformer layer:
+  Bus^i   = { H_j^i[0] }_{j=1..K}                      (Eq. 6: CLS proxies)
+  H^{i+1} = Transformer^i([H_j^i, Bus^i])              (Eq. 7)
+with Q from the segment only and K/V from [segment, bus] (Eq. 8), so
+attention cost is O(K * S * (S + K)) = O(N^2/K + NK) instead of O(N^2).
+
+The final embedding uses two-level additive attention pooling (Eq. 9-14).
+
+TPU adaptation: all segments are encoded in one batched einsum
+([B*K, S] x [B*K, S+K]) — MXU-aligned when S+K pads to a lane multiple; the
+Pallas kernel in kernels/bus_attention.py fuses the concat into the flash
+inner loop so the bus never materializes in HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import dense, layernorm, sdpa
+from .plm import PLMConfig, additive_attention, embed_inputs, ffn
+
+
+def _bus_attention_layer(layer, h, mask, cfg: PLMConfig, impl: str = "xla"):
+    """One BusLM layer. h: [M, K, S, d]; mask: [M, K, S] bool."""
+    M, K, S, d = h.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    ap = layer["attn"]
+
+    use_bus = cfg.use_bus and K > 1
+    if use_bus:
+        bus = h[:, :, 0, :]                                   # [M, K, d]
+        bus_b = jnp.broadcast_to(bus[:, None], (M, K, K, d))  # per-segment copy
+        kv_in = jnp.concatenate([h, bus_b], axis=2)           # [M, K, S+K, d]
+        seg_valid = mask.any(axis=-1)                         # [M, K]
+        bus_mask = jnp.broadcast_to(seg_valid[:, None], (M, K, K))
+        kv_mask = jnp.concatenate([mask, bus_mask], axis=2)   # [M, K, S+K]
+    else:
+        kv_in, kv_mask = h, mask
+
+    Sk = kv_in.shape[2]
+    q = dense(ap["q"], h).reshape(M * K, S, nh, hd)
+    k = dense(ap["k"], kv_in).reshape(M * K, Sk, nh, hd)
+    v = dense(ap["v"], kv_in).reshape(M * K, Sk, nh, hd)
+
+    if impl == "pallas" and use_bus:
+        from repro.kernels import ops as kops
+        out = kops.bus_attention(
+            q.reshape(M, K, S, nh, hd),
+            k.reshape(M, K, Sk, nh, hd),
+            v.reshape(M, K, Sk, nh, hd),
+            kv_mask,
+        ).reshape(M * K, S, nh, hd)
+    else:
+        out = sdpa(q, k, v, causal=False, mask=kv_mask.reshape(M * K, Sk))
+    out = dense(ap["o"], out.reshape(M, K, S, d))
+
+    h = layernorm(layer["ln1"], h + out)
+    h = layernorm(layer["ln2"], h + ffn(layer, h))
+    return h
+
+
+def buslm_encode(params, cfg: PLMConfig, tokens, freq=None, mask=None,
+                 impl: str = "xla"):
+    """Encode news articles. tokens: [M, K, S] -> [M, news_dim].
+
+    Valid (non-pad) tokens are ``tokens != 0``; pass ``mask`` to override.
+    """
+    if mask is None:
+        mask = tokens != 0
+    h = embed_inputs(params, cfg, tokens, freq)               # [M, K, S, d]
+
+    def layer_fn(h, layer):
+        return _bus_attention_layer(layer, h, mask, cfg, impl), None
+
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer_fn)
+    h, _ = jax.lax.scan(layer_fn, h, params["layers"])
+
+    # two-level pooling: tokens -> segment vectors -> news embedding
+    v_seg = additive_attention(params["pool_tok"], h, mask)   # [M, K, d]
+    seg_valid = mask.any(axis=-1)                             # [M, K]
+    e = additive_attention(params["pool_seg"], v_seg, seg_valid)  # [M, d]
+    return dense(params["out_proj"], e)
+
+
+def plm_flops(cfg: PLMConfig, n_news: int) -> float:
+    """Analytic encode FLOPs (fwd) for the roofline/napkin math."""
+    K, S, d, f, L = (cfg.n_segments, cfg.seg_len, cfg.d_model, cfg.d_ff,
+                     cfg.n_layers)
+    Sk = S + (K if (cfg.use_bus and K > 1) else 0)
+    per_layer = (
+        4 * K * S * d * d * 2            # qkv+o projections (q on S; k,v on Sk~S)
+        + 2 * K * S * Sk * d * 2         # logits + weighted sum
+        + 2 * K * S * d * f * 2          # ffn
+    )
+    return n_news * L * per_layer

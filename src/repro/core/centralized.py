@@ -1,0 +1,57 @@
+"""Centralized news encoding (§4.1.1): gather -> dedup -> encode -> dispatch.
+
+All news in a mini-batch (user histories + candidates) are merged into one
+deduplicated set so each article is encoded exactly once; embeddings are then
+dispatched back to their original positions. Pads dispatch a dummy vector.
+
+TPU adaptation: the merged set has a static capacity M_cap
+(``jnp.unique(..., size=M_cap)``); overflowing ids map to the pad slot and
+are counted. The host loader (data/batching.py) performs the same dedup
+off-device and ships index-mapped batches, so the in-graph path here is used
+for (a) property tests and (b) pipelines fed with raw id tensors.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class MergedSet(NamedTuple):
+    ids: jnp.ndarray        # [M_cap] sorted unique ids, 0-padded
+    inv_hist: jnp.ndarray   # [B, L] positions into ids
+    inv_cand: jnp.ndarray   # [B, C] or None
+    overflow: jnp.ndarray   # scalar: distinct ids dropped (capacity)
+
+
+def _invert(uniq, ids):
+    pos = jnp.searchsorted(uniq, ids)
+    pos = jnp.clip(pos, 0, uniq.shape[0] - 1)
+    return jnp.where(uniq[pos] == ids, pos, 0)   # miss -> pad slot
+
+
+def gather_dedup(hist_ids, cand_ids=None, *, m_cap: int) -> MergedSet:
+    """hist_ids: [B, L]; cand_ids: optional [B, C]; 0 = pad everywhere.
+
+    Slot 0 of the merged set is reserved for the pad id (0 sorts first).
+    """
+    parts = [jnp.zeros((1,), hist_ids.dtype),   # slot 0 is ALWAYS the pad /
+             hist_ids.reshape(-1)]              # dummy slot, even when no
+    if cand_ids is not None:                    # input id is 0 (overflow
+        parts.append(cand_ids.reshape(-1))      # must map somewhere inert)
+    flat = jnp.concatenate(parts)
+    # note: unique(size=) appends fill values at the END; re-sort so that
+    # searchsorted-based inversion works and pad zeros occupy the front slots
+    uniq = jnp.sort(jnp.unique(flat, size=m_cap, fill_value=0))
+    # count of distinct ids beyond capacity: compare against unbounded-unique
+    # proxy: number of values that fail to invert
+    inv_hist = _invert(uniq, hist_ids)
+    inv_cand = _invert(uniq, cand_ids) if cand_ids is not None else None
+    miss = (uniq[jnp.clip(jnp.searchsorted(uniq, flat), 0, m_cap - 1)] != flat)
+    overflow = (miss & (flat != 0)).sum()
+    return MergedSet(uniq, inv_hist, inv_cand, overflow)
+
+
+def dispatch(emb_m, inv):
+    """emb_m: [M, d] merged-set embeddings -> [..., d] at original positions."""
+    return jnp.take(emb_m, inv, axis=0)

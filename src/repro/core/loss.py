@@ -1,0 +1,62 @@
+"""Autoregressive click-prediction loss (Eq. 5) with sampled negatives.
+
+L_auto = -sum_{t<L} log softmax(<theta_{t+1}, mu_t> vs negatives).
+Negatives are drawn from the merged news set of the same batch (in-batch
+sampling, ratio configurable; the paper uses ratio 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_negatives(rng, m_cap: int, shape, n_neg: int):
+    """Uniform negative positions into the merged set (slot 0 = pad excluded)."""
+    return jax.random.randint(rng, shape + (n_neg,), 1, m_cap)
+
+
+def ar_loss(mu, theta, hist_mask, emb_m, news_ids_m, neg_idx,
+            hist_inv=None):
+    """mu: [B, L, d] user embeddings; theta: [B, L, d] dispatched news embs;
+    hist_mask: [B, L]; emb_m: [M, d] merged-set embeddings; news_ids_m: [M];
+    neg_idx: [B, L-1, N] positions into the merged set.
+
+    Position t uses mu[:, t] to score theta[:, t+1] against negatives.
+    Returns (mean loss, metrics dict).
+    """
+    mu_t = mu[:, :-1]                         # [B, L-1, d]
+    pos_emb = theta[:, 1:]                    # [B, L-1, d]
+    valid = hist_mask[:, 1:] & hist_mask[:, :-1]
+
+    pos_score = jnp.einsum("bld,bld->bl", mu_t, pos_emb).astype(jnp.float32)
+    neg_emb = jnp.take(emb_m, neg_idx, axis=0)          # [B, L-1, N, d]
+    neg_score = jnp.einsum("bld,blnd->bln", mu_t, neg_emb).astype(jnp.float32)
+
+    # mask degenerate negatives: pad slots or accidental positives
+    neg_ids = news_ids_m[neg_idx]                        # [B, L-1, N]
+    if hist_inv is not None:
+        pos_ids = news_ids_m[hist_inv[:, 1:]][..., None]
+        bad = (neg_ids == 0) | (neg_ids == pos_ids[..., 0][..., None])
+    else:
+        bad = neg_ids == 0
+    neg_score = jnp.where(bad, -1e30, neg_score)
+
+    logits = jnp.concatenate([pos_score[..., None], neg_score], axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)[..., 0]
+    n = jnp.maximum(valid.sum(), 1)
+    loss = -(logp * valid).sum() / n
+    acc = ((logits.argmax(-1) == 0) & valid).sum() / n
+    return loss, {"ar_acc": acc, "n_predictions": valid.sum()}
+
+
+def click_loss(user_emb, cand_emb, labels, cand_mask):
+    """Conventional impression loss: one user embedding scores C candidates.
+
+    user_emb: [B, d]; cand_emb: [B, C, d]; labels: [B] index of clicked;
+    cand_mask: [B, C]."""
+    logits = jnp.einsum("bd,bcd->bc", user_emb, cand_emb).astype(jnp.float32)
+    logits = jnp.where(cand_mask, logits, -1e30)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"click_acc": acc}

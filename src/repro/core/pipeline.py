@@ -1,0 +1,154 @@
+"""SpeedyFeed light-weighted encoding pipeline (Algorithm 1), end to end.
+
+One training step over a centralized batch:
+  1. merged news set M (deduplicated by the loader or by gather_dedup)
+  2. cache plan: which news reuse cached embeddings, which get encoded
+     (fixed budget E; p_t scheduler; gamma expiry)                  §4.1.2
+  3. BusLM-encode the encode set                                    §4.1.3
+  4. assemble + dispatch embeddings to history positions            §4.1.1
+  5. autoregressive user modeling + Eq.5 loss over all L positions  §4.1.4
+  6. refresh cache
+
+Also provides the *conventional workflow* step (per-instance encoding, no
+dedup/cache/AR) used as the speedup baseline in benchmarks (paper Table 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .plm import PLMConfig, init_plm
+from .buslm import buslm_encode
+from .cache import (CacheConfig, CacheState, assemble_embeddings, cache_plan,
+                    cache_refresh, init_cache)
+from .centralized import dispatch
+from .loss import ar_loss, click_loss, sample_negatives
+from .user_model import (UserModelConfig, attentive_user, init_user_model,
+                         user_embeddings)
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedyFeedConfig:
+    plm: PLMConfig
+    user: UserModelConfig
+    cache: CacheConfig
+    batch_users: int = 32     # B
+    hist_len: int = 100       # L
+    merged_cap: int = 512     # M
+    n_neg: int = 4            # negatives per prediction
+    attn_impl: str = "xla"    # xla | pallas
+
+
+def make_config(*, vocab=30522, n_layers=12, d_model=768, n_heads=12,
+                d_ff=3072, n_segments=3, seg_len=32, news_dim=64,
+                n_news=1_202_576, gamma=20, beta=2e-3, encode_budget=256,
+                batch_users=32, hist_len=100, merged_cap=512, n_neg=4,
+                user_kind="attentive", use_bus=True, use_freq=True,
+                remat=False) -> SpeedyFeedConfig:
+    plm = PLMConfig(vocab=vocab, n_layers=n_layers, d_model=d_model,
+                    n_heads=n_heads, d_ff=d_ff, n_segments=n_segments,
+                    seg_len=seg_len, news_dim=news_dim, use_bus=use_bus,
+                    use_freq_embedding=use_freq, remat=remat)
+    user = UserModelConfig(news_dim=news_dim, kind=user_kind, causal=True)
+    cache = CacheConfig(n_news=n_news, news_dim=news_dim, gamma=gamma,
+                        beta=beta, encode_budget=encode_budget)
+    return SpeedyFeedConfig(plm=plm, user=user, cache=cache,
+                            batch_users=batch_users, hist_len=hist_len,
+                            merged_cap=merged_cap, n_neg=n_neg)
+
+
+def init_speedyfeed(key, cfg: SpeedyFeedConfig, param_dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"plm": init_plm(k1, cfg.plm, param_dtype),
+            "user": init_user_model(k2, cfg.user, param_dtype)}
+
+
+class StepOut(NamedTuple):
+    loss: jax.Array
+    cache: CacheState
+    metrics: dict
+
+
+def speedyfeed_forward(params, cfg: SpeedyFeedConfig, batch, cache: CacheState,
+                       step, rng) -> StepOut:
+    """Algorithm 1. batch keys (loader-produced, already centralized):
+      news_tokens [M, K, S]  news_freq [M, K, S]  news_ids [M]
+      hist_inv [B, L]        hist_mask [B, L]
+    """
+    rng_cache, rng_neg = jax.random.split(rng)
+    news_ids = batch["news_ids"]
+
+    # (2) cache plan + (3) encode the budget set
+    # The merged set is replicated (global dedup/argsort); the ENCODE set is
+    # explicitly data-sharded so the PLM runs data-parallel — without this
+    # constraint XLA keeps the whole encoder replicated (16x the FLOPs/chip;
+    # see EXPERIMENTS.md §Perf/H1).
+    from repro.distributed import sharding as shx
+    plan = cache_plan(cache, news_ids, step, rng_cache, cfg.cache)
+    enc_tokens = shx.constrain(
+        jnp.take(batch["news_tokens"], plan.enc_pos, axis=0), "encode_batch")
+    enc_freq = shx.constrain(
+        jnp.take(batch["news_freq"], plan.enc_pos, axis=0), "encode_batch")
+    new_emb = buslm_encode(params["plm"], cfg.plm, enc_tokens, enc_freq,
+                           impl=cfg.attn_impl)
+
+    # (4) assemble merged-set embeddings and dispatch
+    emb_m = assemble_embeddings(cache, plan, news_ids, new_emb)
+    theta = dispatch(emb_m, batch["hist_inv"])           # [B, L, d]
+    mask = batch["hist_mask"]
+
+    # (5) autoregressive user modeling + Eq. 5
+    mu = user_embeddings(params["user"], cfg.user, theta, mask)
+    neg_idx = sample_negatives(rng_neg, cfg.merged_cap,
+                               mask[:, 1:].shape, cfg.n_neg)
+    loss, m = ar_loss(mu, theta, mask, emb_m, news_ids, neg_idx,
+                      hist_inv=batch["hist_inv"])
+
+    # (6) refresh
+    new_cache = cache_refresh(cache, plan, news_ids, new_emb, step)
+
+    tok_valid = (enc_tokens != 0).sum()
+    m.update({
+        "p_t": plan.p_t,
+        "encoded": plan.enc_valid.sum(),
+        "reused": plan.reuse.sum(),
+        "cache_overflow": plan.overflow,
+        "data_efficiency": tok_valid / jnp.maximum(enc_tokens.size, 1),
+    })
+    return StepOut(loss, new_cache, m)
+
+
+# ---------------------------------------------------------------------------
+# conventional workflow (the paper's baseline; Figure 1 left)
+# ---------------------------------------------------------------------------
+
+def conventional_forward(params, cfg: SpeedyFeedConfig, batch):
+    """Typical workflow: every training instance encodes its *own* history
+    and candidates with the PLM; one click prediction per instance.
+
+    batch: hist_tokens [B, L, K, S], hist_freq, hist_mask [B, L],
+           cand_tokens [B, C, K, S], cand_freq, label [B], cand_mask [B, C].
+    """
+    B, L, K, S = batch["hist_tokens"].shape
+    C = batch["cand_tokens"].shape[1]
+    flat_tokens = jnp.concatenate([
+        batch["hist_tokens"].reshape(B * L, K, S),
+        batch["cand_tokens"].reshape(B * C, K, S)], axis=0)
+    flat_freq = jnp.concatenate([
+        batch["hist_freq"].reshape(B * L, K, S),
+        batch["cand_freq"].reshape(B * C, K, S)], axis=0)
+    emb = buslm_encode(params["plm"], cfg.plm, flat_tokens, flat_freq,
+                       impl=cfg.attn_impl)
+    theta = emb[:B * L].reshape(B, L, -1)
+    cand = emb[B * L:].reshape(B, C, -1)
+    user = attentive_user(params["user"], theta, batch["hist_mask"])
+    return click_loss(user, cand, batch["label"], batch["cand_mask"])
+
+
+def speedyfeed_state(cfg: SpeedyFeedConfig, key=None, param_dtype=jnp.float32):
+    """(params, cache) convenience initializer."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return init_speedyfeed(key, cfg, param_dtype), init_cache(cfg.cache)

@@ -1,0 +1,115 @@
+"""PLM news encoder substrate (UniLM-like bidirectional transformer).
+
+The paper initializes from UniLMv2-base (12L x 768d x 12H). Offline we match
+the architecture (configurable scale) with random init; the OBoW *frequency
+embedding* (paper §4.2.1) is a first-class input embedding alongside token /
+position / segment embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import (AttnConfig, attention, dense, init_attention,
+                      init_dense, init_embedding, init_layernorm, layernorm,
+                      embed)
+
+
+@dataclasses.dataclass(frozen=True)
+class PLMConfig:
+    vocab: int = 30522
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    d_ff: int = 3072
+    max_len: int = 512           # positions
+    n_segments: int = 3          # BusLM K (title/abstract/body); 1 = no split
+    seg_len: int = 32            # tokens per segment
+    max_freq: int = 32           # OBoW frequency embedding vocab
+    use_freq_embedding: bool = True
+    news_dim: int = 64           # final news embedding dim (paper uses d_model;
+                                 # production uses a projection — configurable)
+    use_bus: bool = True
+    dtype: str = "float32"
+    remat: bool = False
+
+    @property
+    def attn(self) -> AttnConfig:
+        return AttnConfig(d_model=self.d_model, n_heads=self.n_heads,
+                          n_kv=self.n_heads, head_dim=self.d_model // self.n_heads,
+                          qkv_bias=True, out_bias=True, qk_norm=False,
+                          rope_fraction=0.0, causal=False)
+
+
+def init_plm(key, cfg: PLMConfig, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 8 + cfg.n_layers)
+    p = {
+        "tok_emb": init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype=param_dtype),
+        "pos_emb": init_embedding(ks[1], cfg.max_len, cfg.d_model, dtype=param_dtype),
+        "seg_emb": init_embedding(ks[2], max(cfg.n_segments, 2), cfg.d_model,
+                                  dtype=param_dtype),
+        "emb_ln": init_layernorm(ks[3], cfg.d_model, param_dtype),
+        # two-level attention pooling (paper Appendix Eq. 9-14)
+        "pool_tok": _init_addattn(ks[4], cfg.d_model, param_dtype),
+        "pool_seg": _init_addattn(ks[5], cfg.d_model, param_dtype),
+        "out_proj": init_dense(ks[6], cfg.d_model, cfg.news_dim, use_bias=True,
+                               dtype=param_dtype),
+    }
+    if cfg.use_freq_embedding:
+        p["freq_emb"] = init_embedding(ks[7], cfg.max_freq, cfg.d_model,
+                                       dtype=param_dtype)
+    layer_keys = ks[8:]
+    p["layers"] = jax.vmap(lambda k: _init_layer(k, cfg, param_dtype))(
+        jnp.stack(layer_keys))
+    return p
+
+
+def _init_addattn(key, dim, param_dtype):
+    k1, k2 = jax.random.split(key)
+    return {"proj": init_dense(k1, dim, dim, use_bias=True, dtype=param_dtype),
+            "query": (jax.random.normal(k2, (dim,)) * 0.02).astype(param_dtype)}
+
+
+def _init_layer(key, cfg: PLMConfig, param_dtype):
+    ks = jax.random.split(key, 5)
+    return {
+        "attn": init_attention(ks[0], cfg.attn, param_dtype),
+        "ln1": init_layernorm(ks[1], cfg.d_model, param_dtype),
+        "ffn_up": init_dense(ks[2], cfg.d_model, cfg.d_ff, use_bias=True,
+                             stddev=0.02, dtype=param_dtype),
+        "ffn_down": init_dense(ks[3], cfg.d_ff, cfg.d_model, use_bias=True,
+                               stddev=0.02, dtype=param_dtype),
+        "ln2": init_layernorm(ks[4], cfg.d_model, param_dtype),
+    }
+
+
+def additive_attention(p, h, mask=None):
+    """Eq. 9-11 / 12-14: softmax(q^T tanh(W h + b)) weighted sum over axis -2.
+
+    h: [..., N, d]; mask: [..., N] bool. Returns [..., d].
+    """
+    a = jnp.einsum("...nd,d->...n",
+                   jnp.tanh(dense(p["proj"], h).astype(jnp.float32)),
+                   p["query"].astype(jnp.float32))
+    if mask is not None:
+        a = jnp.where(mask, a, -1e30)
+    w = jax.nn.softmax(a, axis=-1).astype(h.dtype)
+    return jnp.einsum("...n,...nd->...d", w, h)
+
+
+def embed_inputs(p, cfg: PLMConfig, tokens, freq=None):
+    """tokens: [B, K, S] -> [B, K, S, d] summed embeddings."""
+    B, K, S = tokens.shape
+    h = embed(p["tok_emb"], tokens)
+    h = h + embed(p["pos_emb"], jnp.arange(S))[None, None]
+    h = h + embed(p["seg_emb"], jnp.arange(K))[None, :, None]
+    if cfg.use_freq_embedding and freq is not None:
+        h = h + embed(p["freq_emb"], jnp.clip(freq, 0, cfg.max_freq - 1))
+    return layernorm(p["emb_ln"], h)
+
+
+def ffn(layer, x):
+    h = jax.nn.gelu(dense(layer["ffn_up"], x))
+    return dense(layer["ffn_down"], h)

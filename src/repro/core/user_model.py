@@ -1,0 +1,90 @@
+"""User encoders (§4.1.4, §5.1.2).
+
+* ``attentive``        — Attentive YouTube-DNN (the paper's default): a
+                         learnable-query additive attention over history
+                         news embeddings.
+* ``attentive_causal`` — the autoregressive form: mu_t aggregates only
+                         {theta_l}_{l<=t}. Because additive attention is a
+                         weighted mean, the causal variant is computed with
+                         prefix sums in O(L) — this is the "encoded prefix is
+                         reused for all subsequent user embeddings" insight,
+                         realized as cumsum instead of per-instance re-encode.
+* ``nrms``             — multi-head self-attention user encoder (NRMS), with
+                         a causal switch for the autoregressive mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import (AttnConfig, attention, dense, init_attention,
+                      init_dense)
+
+
+@dataclasses.dataclass(frozen=True)
+class UserModelConfig:
+    news_dim: int
+    kind: str = "attentive"   # attentive | nrms
+    n_heads: int = 4          # nrms only
+    causal: bool = True
+
+
+def init_user_model(key, cfg: UserModelConfig, param_dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.news_dim
+    p = {"proj": init_dense(k1, d, d, use_bias=True, dtype=param_dtype),
+         "query": (jax.random.normal(k2, (d,)) * 0.02).astype(param_dtype)}
+    if cfg.kind == "nrms":
+        p["self_attn"] = init_attention(k3, _nrms_attn_cfg(cfg), param_dtype)
+    return p
+
+
+def _nrms_attn_cfg(cfg: UserModelConfig) -> AttnConfig:
+    return AttnConfig(d_model=cfg.news_dim, n_heads=cfg.n_heads,
+                      n_kv=cfg.n_heads, head_dim=cfg.news_dim // cfg.n_heads,
+                      qkv_bias=True, out_bias=True, rope_fraction=0.0,
+                      causal=cfg.causal)
+
+
+def _scores(p, theta):
+    return jnp.einsum(
+        "bld,d->bl",
+        jnp.tanh(dense(p["proj"], theta).astype(jnp.float32)),
+        p["query"].astype(jnp.float32))
+
+
+def attentive_user(p, theta, mask):
+    """theta: [B, L, d]; mask: [B, L] -> [B, d] (non-causal pooling)."""
+    a = jnp.where(mask, _scores(p, theta), -1e30)
+    w = jax.nn.softmax(a, axis=-1).astype(theta.dtype)
+    return jnp.einsum("bl,bld->bd", w, theta)
+
+
+def attentive_user_causal(p, theta, mask):
+    """Autoregressive user embeddings: mu_t from {theta_l}_{l<=t}.
+
+    Prefix-sum formulation: mu_t = sum_{l<=t} alpha_l theta_l / sum alpha_l.
+    Returns [B, L, d]; positions with an empty prefix yield zeros.
+    """
+    a = _scores(p, theta)                              # [B, L] fp32
+    a = a - jax.lax.stop_gradient(a.max(axis=-1, keepdims=True))
+    w = jnp.exp(a) * mask.astype(jnp.float32)
+    num = jnp.cumsum(w[..., None] * theta.astype(jnp.float32), axis=1)
+    den = jnp.cumsum(w, axis=1)[..., None]
+    mu = num / jnp.maximum(den, 1e-9)
+    return mu.astype(theta.dtype)
+
+
+def user_embeddings(p, cfg: UserModelConfig, theta, mask):
+    """Dispatch on kind/causal. Causal -> [B, L, d]; else [B, d]."""
+    if cfg.kind == "nrms":
+        h = attention(p["self_attn"], theta, _nrms_attn_cfg(cfg), mask=mask)
+        theta = theta + h
+        if cfg.causal:
+            return attentive_user_causal(p, theta, mask)
+        return attentive_user(p, theta, mask)
+    if cfg.causal:
+        return attentive_user_causal(p, theta, mask)
+    return attentive_user(p, theta, mask)

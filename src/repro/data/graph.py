@@ -1,0 +1,150 @@
+"""Graph data substrate: random graph generators, fanout neighbor sampling
+(GraphSAGE-style, required by minibatch_lg), and triplet-list construction
+for DimeNet's directional message passing.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def build_triplets(src: np.ndarray, dst: np.ndarray, *, t_cap: int,
+                   rng: np.random.Generator | None = None):
+    """Triplets (kj -> ji): for each edge ji, pair with every edge kj whose
+    destination is j (k != i). Returns (trip_kj, trip_ji, mask) padded/capped
+    to ``t_cap``; over-budget triplets are uniformly subsampled.
+    """
+    E = len(src)
+    in_edges = {}
+    for e in range(E):
+        in_edges.setdefault(int(dst[e]), []).append(e)
+    kj, ji = [], []
+    for e in range(E):
+        j, i = int(src[e]), int(dst[e])
+        for e2 in in_edges.get(j, ()):
+            if int(src[e2]) != i:
+                kj.append(e2)
+                ji.append(e)
+    kj = np.asarray(kj, np.int32)
+    ji = np.asarray(ji, np.int32)
+    if len(kj) > t_cap:
+        rng = rng or np.random.default_rng(0)
+        sel = rng.choice(len(kj), t_cap, replace=False)
+        kj, ji = kj[sel], ji[sel]
+    mask = np.zeros(t_cap, bool)
+    mask[:len(kj)] = True
+    out_kj = np.zeros(t_cap, np.int32)
+    out_ji = np.zeros(t_cap, np.int32)
+    out_kj[:len(kj)] = kj
+    out_ji[:len(ji)] = ji
+    return out_kj, out_ji, mask
+
+
+def random_graph(rng: np.random.Generator, n: int, e: int):
+    """Random directed graph without self loops."""
+    src = rng.integers(0, n, e)
+    dst = (src + 1 + rng.integers(0, n - 1, e)) % n
+    return src.astype(np.int32), dst.astype(np.int32)
+
+
+def random_molecule_batch(rng: np.random.Generator, *, n_graphs: int,
+                          nodes_per_graph: int, t_cap: int,
+                          edges_per_graph: int | None = None):
+    """Batched small molecules flattened into one disjoint graph."""
+    npg = nodes_per_graph
+    epg = edges_per_graph or npg * 2
+    N, E = n_graphs * npg, n_graphs * epg
+    srcs, dsts, gids = [], [], []
+    for g in range(n_graphs):
+        s, d = random_graph(rng, npg, epg)
+        srcs.append(s + g * npg)
+        dsts.append(d + g * npg)
+        gids.append(np.full(npg, g, np.int32))
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    kj, ji, tm = build_triplets(src, dst, t_cap=t_cap, rng=rng)
+    return {
+        "z": jnp.asarray(rng.integers(1, 10, N), jnp.int32),
+        "pos": jnp.asarray(rng.normal(size=(N, 3)) * 1.5, jnp.float32),
+        "edge_src": jnp.asarray(src), "edge_dst": jnp.asarray(dst),
+        "edge_mask": jnp.ones((E,), bool),
+        "trip_kj": jnp.asarray(kj), "trip_ji": jnp.asarray(ji),
+        "trip_mask": jnp.asarray(tm),
+        "graph_id": jnp.asarray(np.concatenate(gids)),
+        "targets": jnp.asarray(rng.normal(size=(n_graphs,)), jnp.float32),
+    }
+
+
+class CSRGraph:
+    """Compressed neighbor lists for fanout sampling."""
+
+    def __init__(self, n_nodes: int, src: np.ndarray, dst: np.ndarray):
+        order = np.argsort(dst, kind="stable")
+        self.src_sorted = src[order]
+        self.indptr = np.zeros(n_nodes + 1, np.int64)
+        np.add.at(self.indptr, dst + 1, 1)
+        np.cumsum(self.indptr, out=self.indptr)
+        self.n_nodes = n_nodes
+
+    def neighbors(self, v: int):
+        return self.src_sorted[self.indptr[v]:self.indptr[v + 1]]
+
+
+def fanout_sample(graph: CSRGraph, seeds: np.ndarray, fanouts,
+                  rng: np.random.Generator):
+    """GraphSAGE fanout sampling. Returns (node_ids, src, dst) where src/dst
+    index into node_ids (local ids) and edges point sampled-neighbor -> node.
+    """
+    nodes = list(seeds)
+    local = {int(v): i for i, v in enumerate(seeds)}
+    src_l, dst_l = [], []
+    frontier = list(seeds)
+    for f in fanouts:
+        nxt = []
+        for v in frontier:
+            nbrs = graph.neighbors(int(v))
+            if len(nbrs) == 0:
+                continue
+            pick = nbrs if len(nbrs) <= f else rng.choice(nbrs, f,
+                                                          replace=False)
+            for u in pick:
+                u = int(u)
+                if u not in local:
+                    local[u] = len(nodes)
+                    nodes.append(u)
+                    nxt.append(u)
+                src_l.append(local[u])
+                dst_l.append(local[int(v)])
+        frontier = nxt
+    return (np.asarray(nodes, np.int64),
+            np.asarray(src_l, np.int32), np.asarray(dst_l, np.int32))
+
+
+def padded_subgraph_batch(graph: CSRGraph, feats: np.ndarray,
+                          labels: np.ndarray, seeds: np.ndarray, fanouts,
+                          *, n_cap: int, e_cap: int, t_cap: int,
+                          rng: np.random.Generator):
+    """Sample + pad to static caps -> DimeNet node-level batch dict."""
+    nodes, src, dst = fanout_sample(graph, seeds, fanouts, rng)
+    nodes, src, dst = nodes[:n_cap], src, dst
+    keep = (src < n_cap) & (dst < n_cap)
+    src, dst = src[keep][:e_cap], dst[keep][:e_cap]
+    n, e = len(nodes), len(src)
+    kj, ji, tm = build_triplets(src, dst, t_cap=t_cap, rng=rng)
+    feat = np.zeros((n_cap, feats.shape[1]), np.float32)
+    feat[:n] = feats[nodes]
+    pos = rng.normal(size=(n_cap, 3)).astype(np.float32)  # synthetic geometry
+    lab = np.zeros(n_cap, np.int32)
+    lab[:n] = labels[nodes]
+    lmask = np.zeros(n_cap, bool)
+    lmask[:min(len(seeds), n)] = True                     # loss on seeds
+    es = np.zeros(e_cap, np.int32)
+    ed = np.zeros(e_cap, np.int32)
+    em = np.zeros(e_cap, bool)
+    es[:e], ed[:e], em[:e] = src, dst, True
+    return {"feat": jnp.asarray(feat), "pos": jnp.asarray(pos),
+            "edge_src": jnp.asarray(es), "edge_dst": jnp.asarray(ed),
+            "edge_mask": jnp.asarray(em),
+            "trip_kj": jnp.asarray(kj), "trip_ji": jnp.asarray(ji),
+            "trip_mask": jnp.asarray(tm),
+            "labels": jnp.asarray(lab), "label_mask": jnp.asarray(lmask)}

@@ -1,0 +1,189 @@
+"""Partition rules: parameter/batch PartitionSpecs per model family.
+
+Rules are (path-regex, PartitionSpec) tables matched against the flattened
+parameter path (first match wins; default = replicated). This mirrors the
+MaxText/T5X logical-axis-rules approach but stays concrete: the mesh axes
+are fixed to (pod, data, model) — ``pod`` and ``data`` are both data
+parallel (pod crosses DCN), ``model`` is tensor/expert/table parallel.
+
+FSDP variants additionally shard the non-model weight dim over ``data``
+(ZeRO-3-style; XLA inserts the per-layer all-gathers inside the scan).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DATA_AXES = ("pod", "data")     # present subset used automatically
+
+# ---------------------------------------------------------------------------
+# activation-sharding context: launchers register named activation specs
+# (e.g. Megatron-style sequence parallelism on the residual stream) and
+# models call ``constrain(x, name)`` — a no-op when nothing is registered,
+# which keeps model code mesh-agnostic.
+# ---------------------------------------------------------------------------
+
+_ACTIVATION_SPECS: dict = {}
+
+
+def set_activation_specs(specs: dict):
+    """specs: {name: PartitionSpec}. Pass {} to clear."""
+    _ACTIVATION_SPECS.clear()
+    _ACTIVATION_SPECS.update(specs)
+
+
+def constrain(x, name: str):
+    spec = _ACTIVATION_SPECS.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def data_spec(mesh, *dims):
+    """P with batch dim over the present data axes; None for the rest."""
+    present = tuple(a for a in DATA_AXES if a in mesh.axis_names)
+    return P(present if present else None, *dims)
+
+
+def spec_tree(params, rules, default=P()):
+    """Match flattened param paths against (regex, spec) rules."""
+    compiled = [(re.compile(r), s) for r, s in rules]
+
+    def match(path, leaf):
+        s = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                     for p in path)
+        for rx, spec in compiled:
+            if rx.search(s):
+                return _fit(spec, leaf)
+        return default
+
+    return jax.tree_util.tree_map_with_path(match, params)
+
+
+def _fit(spec, leaf):
+    """Pad a spec with Nones to the leaf rank (specs are right-anchored on
+    the trailing dims, since stacked-layer params add a leading L dim)."""
+    ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+    pad = ndim - len(spec)
+    if pad < 0:
+        return P(*spec[-ndim:]) if ndim else P()
+    return P(*([None] * pad + list(spec)))
+
+
+def named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# per-family rule tables
+# ---------------------------------------------------------------------------
+
+def lm_rules(fsdp: bool = False):
+    dp = "data" if fsdp else None
+    return [
+        # attention: column-parallel qkv, row-parallel o
+        (r"attn/q/w$", P(dp, "model")),
+        (r"attn/[kv]/w$", P(dp, "model")),
+        (r"attn/o/w$", P("model", dp)),
+        (r"attn/[qkv]/b$", P("model")),
+        (r"attn/o/b$", P()),
+        # dense mlp: column-parallel up/gate, row-parallel down
+        (r"ffn/(gate|up)/w$", P(dp, "model")),
+        (r"ffn/down/w$", P("model", dp)),
+        (r"shared/(gate|up)/w$", P(dp, "model")),
+        (r"shared/down/w$", P("model", dp)),
+        # moe: experts over model axis
+        (r"moe/router$", P()),
+        (r"moe/w[13]$", P("model", dp, None)),
+        (r"moe/w2$", P("model", None, dp)),
+        # embeddings: vocab-sharded; head column-parallel
+        (r"embed/table$", P("model", dp)),
+        (r"^head/w$", P(dp, "model")),
+        # norms replicated
+        (r"ln", P()),
+        (r"_norm", P()),
+    ]
+
+
+def lm_batch_specs(mesh, kind: str):
+    if kind == "train":
+        return {"tokens": data_spec(mesh), "labels": data_spec(mesh)}
+    if kind == "prefill":
+        return {"tokens": data_spec(mesh)}
+    if kind == "decode":
+        # cache: [L, B, S, Hkv, hd] — batch over data axes, heads over model
+        return {"token": data_spec(mesh),
+                "cache": jax.tree.map(
+                    lambda _: P(None, tuple(a for a in DATA_AXES
+                                            if a in mesh.axis_names),
+                                None, "model", None),
+                    {"k": 0, "v": 0}),
+                "index": P()}
+    raise ValueError(kind)
+
+
+def recsys_rules():
+    return [
+        (r"tables/fused$", P("model", None)),     # row-sharded big table
+        (r"wide/fused$", P("model", None)),
+        (r"item_emb/table$", P("model", None)),
+        (r"(bot|top|deep|mlp)/l\d+/w$", P()),     # small dense towers replicated
+        (r"cross/\d+/w$", P()),
+        (r".*", P()),
+    ]
+
+
+def recsys_batch_specs(mesh, keys):
+    return {k: data_spec(mesh) for k in keys}
+
+
+def gnn_rules():
+    # node/edge model params are small -> replicated
+    return [(r".*", P())]
+
+
+def gnn_batch_specs(mesh, batch_like):
+    """Edge/triplet arrays sharded over every axis (pure additive scatter);
+    node arrays replicated."""
+    all_axes = tuple(mesh.axis_names)
+
+    def spec(path, leaf):
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in path)
+        if name.startswith(("edge_", "trip_")):
+            return P(all_axes)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, batch_like)
+
+
+def speedyfeed_rules(tp: bool = False):
+    """SpeedyFeed PLM sharding.
+
+    tp=False (default, §Perf/H1-2): the 110M-param encoder is REPLICATED and
+    the encode batch shards over every mesh axis — pure DP. For a model this
+    size, Megatron TP over 16 ways costs 24 per-layer psums/step (~280 ms of
+    ICI) vs one 440 MB gradient all-reduce (~18 ms); DP wins by ~15x on the
+    collective term and matches the paper's own data-parallel setup.
+    tp=True keeps the Megatron layout (measured baseline in EXPERIMENTS.md).
+    """
+    if not tp:
+        return [(r".*", P())]
+    return [
+        (r"plm/layers/attn/[qkv]/w$", P(None, "model")),
+        (r"plm/layers/attn/[qkv]/b$", P("model")),
+        (r"plm/layers/attn/o/w$", P("model", None)),
+        (r"plm/layers/ffn_up/w$", P(None, "model")),
+        (r"plm/layers/ffn_up/b$", P("model")),
+        (r"plm/layers/ffn_down/w$", P("model", None)),
+        (r"plm/(tok|pos)_emb/table$", P("model", None)),
+        (r"plm/(seg|freq)_emb/table$", P()),     # tiny tables: replicate
+        (r".*", P()),
+    ]
+
+
+def speedyfeed_cache_spec(mesh):
+    return {"emb": data_spec(mesh, None), "written_step": data_spec(mesh)}

@@ -1,0 +1,108 @@
+"""Straggler mitigation + elastic utilities (host-side control plane).
+
+At 1000+ nodes the two dominant failure modes outside of hard crashes are
+slow hosts (data-loader stalls, thermal throttling) and lost hosts. The
+device-side program is SPMD and lock-stepped, so mitigation happens at the
+host layer:
+
+  * ``StepTimeMonitor`` — per-host EMA of step wall time; flags outliers and
+    computes a rebalanced per-host microbatch allocation (work moves away
+    from stragglers in units of microbatches; the global batch is invariant).
+  * ``WorkStealingQueue``  — the input pipeline's multi-producer queue;
+    idle loader threads steal from the slowest shard's backlog.
+  * elastic re-mesh planning — given a checkpointed data-axis size and a new
+    world size, compute the largest valid mesh and the boot decision.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+
+class StepTimeMonitor:
+    def __init__(self, n_hosts: int, *, alpha: float = 0.2,
+                 threshold: float = 1.3):
+        self.n_hosts = n_hosts
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ema = [None] * n_hosts
+
+    def record(self, host: int, seconds: float):
+        e = self.ema[host]
+        self.ema[host] = seconds if e is None else \
+            (1 - self.alpha) * e + self.alpha * seconds
+
+    def stragglers(self):
+        known = [e for e in self.ema if e is not None]
+        if len(known) < 2:
+            return []
+        med = sorted(known)[len(known) // 2]
+        return [i for i, e in enumerate(self.ema)
+                if e is not None and e > self.threshold * med]
+
+    def rebalance(self, microbatches_per_host: int):
+        """Return per-host microbatch counts keeping the global sum fixed.
+
+        Each straggler sheds one microbatch per call; the fastest hosts pick
+        them up. Never drops a host below 1 microbatch."""
+        total = microbatches_per_host * self.n_hosts
+        alloc = [microbatches_per_host] * self.n_hosts
+        slow = self.stragglers()
+        if not slow:
+            return alloc
+        order = sorted(range(self.n_hosts),
+                       key=lambda i: self.ema[i] if self.ema[i] else 0.0)
+        fast = [i for i in order if i not in slow]
+        fi = 0
+        for s in slow:
+            if alloc[s] > 1 and fast:
+                alloc[s] -= 1
+                alloc[fast[fi % len(fast)]] += 1
+                fi += 1
+        assert sum(alloc) == total
+        return alloc
+
+
+class WorkStealingQueue:
+    """Multi-shard producer queue with stealing (used by the data loader)."""
+
+    def __init__(self, n_shards: int):
+        self._qs = [collections.deque() for _ in range(n_shards)]
+        self._lock = threading.Lock()
+        self.steals = 0
+
+    def put(self, shard: int, item):
+        with self._lock:
+            self._qs[shard].append(item)
+
+    def get(self, shard: int, *, timeout: float = 0.0):
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                if self._qs[shard]:
+                    return self._qs[shard].popleft()
+                victim = max(range(len(self._qs)),
+                             key=lambda i: len(self._qs[i]))
+                if self._qs[victim]:
+                    self.steals += 1
+                    return self._qs[victim].pop()   # steal from the tail
+            if time.monotonic() >= deadline:
+                return None
+            time.sleep(0.001)
+
+    def qsize(self):
+        with self._lock:
+            return sum(len(q) for q in self._qs)
+
+
+def plan_elastic_mesh(n_devices: int, *, model: int = 16,
+                      min_data: int = 1):
+    """Largest (data, model) mesh for the surviving device count.
+
+    Model parallelism is fixed by the checkpoint's weight sharding; the data
+    axis absorbs elasticity. Returns (data, model) or None if impossible."""
+    if n_devices < model * min_data:
+        return None
+    data = n_devices // model
+    return (data, model)

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the perf-critical compute layers:
+#   flash_attention — causal GQA streaming attention (LM family hot spot)
+#   bus_attention   — BusLM fused segment+bus attention (the paper's kernel)
+#   embedding_bag   — fused gather+reduce over embedding tables (recsys)
+# Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers
+# (interpret mode on CPU, Mosaic on TPU).
+from . import ops, ref

@@ -1,0 +1,74 @@
+"""BusLM segment+bus attention — the paper's kernel (§4.1.3) as a Pallas
+TPU kernel.
+
+Problem shape: M news x K segments x S tokens attend over the segment's own
+S keys PLUS the K bus proxies ([CLS] of every segment of the same news) —
+Sk = S + K. The paper's config is tiny per-segment (S=32, K=3): the entire
+[S, Sk] score tile fits in VMEM, so the economic design is a *fully fused*
+attention (scores + mask + softmax + PV in one kernel invocation) rather
+than a streaming flash loop — probabilities never exist in HBM, and the
+bus concat is materialized once by the wrapper instead of per-layer
+(wrapper ops.bus_attention builds kv = [segment, bus]).
+
+Grid: (M_blocks, K, H); block = one head of one segment for a block of
+news. MXU alignment: the wrapper pads S and Sk up to multiples of 8 lanes x
+128 sublanes are handled by Mosaic for these small tiles; D = d_model /
+n_heads (64 for the production PLM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale: float):
+    # blocks: q [bm, 1, S, 1, D]; k/v [bm, 1, Sk, 1, D]; mask [bm, 1, Sk]
+    q = q_ref[:, 0, :, 0, :].astype(jnp.float32)         # [bm, S, D]
+    k = k_ref[:, 0, :, 0, :].astype(jnp.float32)         # [bm, Sk, D]
+    v = v_ref[:, 0, :, 0, :].astype(jnp.float32)
+    mask = mask_ref[:, 0, :]                             # [bm, Sk] bool
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,)))) * scale
+    s = jnp.where(mask[:, None, :], s, NEG_INF)          # [bm, S, Sk]
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jax.lax.dot_general(p / denom, v, (((2,), (1,)), ((0,), (0,))))
+    o_ref[:, 0, :, 0, :] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def bus_attention(q, k, v, kv_mask, *, block_m: int = 8,
+                  interpret: bool = True):
+    """q: [M, K, S, H, D]; k/v: [M, K, Sk, H, D]; kv_mask: [M, K, Sk].
+
+    Returns [M, K, S, H, D]. Sk = S + K (bus columns appended by the
+    wrapper); masked (padded) keys contribute nothing.
+    """
+    M, K, S, H, D = q.shape
+    Sk = k.shape[2]
+    block_m = min(block_m, M)
+    assert M % block_m == 0, "merged-set size must divide block_m"
+    scale = D ** -0.5
+    kernel = functools.partial(_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, K, H),
+        in_specs=[
+            pl.BlockSpec((block_m, 1, S, 1, D),
+                         lambda m, kk, h: (m, kk, 0, h, 0)),
+            pl.BlockSpec((block_m, 1, Sk, 1, D),
+                         lambda m, kk, h: (m, kk, 0, h, 0)),
+            pl.BlockSpec((block_m, 1, Sk, 1, D),
+                         lambda m, kk, h: (m, kk, 0, h, 0)),
+            pl.BlockSpec((block_m, 1, Sk), lambda m, kk, h: (m, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, 1, S, 1, D),
+                               lambda m, kk, h: (m, kk, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, K, S, H, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v, kv_mask)

@@ -1,0 +1,114 @@
+"""Flash attention (causal, GQA) — Pallas TPU kernel.
+
+Streaming online-softmax over K/V blocks: for each (batch, q-head, q-block)
+the kernel iterates k-blocks in the last grid dimension, keeping the running
+max / normalizer / accumulator in VMEM scratch, so the [Sq, Sk] probability
+matrix never exists in HBM (this is the memory-roofline fix for the S^2
+attention traffic measured in the dry-run baseline — EXPERIMENTS.md §Perf).
+
+Layout: [B, H, S, D] blocks; BlockSpecs map the GQA group h -> h // G on
+K/V so grouped heads stream the same KV tiles. Causal blocks above the
+diagonal are skipped entirely (grid-level early-out via pl.when).
+
+MXU alignment: block_q/block_k default 128; D is the head dim (128 for
+every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            n_k: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q + (seq_k - pl.num_programs(2) * block_q)
+    k_start = ki * block_k
+    needed = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(needed if isinstance(needed, bool) else needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(p, v)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] -> [B, Sq, Hq, D]."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_k = Sq // block_q, Sk // block_k
+
+    qt = q.transpose(0, 2, 1, 3)      # [B, Hq, Sq, D]
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k, n_k=n_k,
+                               seq_k=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this container (CPU) every kernel runs in interpret mode — the kernel
+body executes in Python with real Pallas semantics — which is the
+correctness-validation path; on TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import bus_attention as _bus
+from . import embedding_bag as _ebag
+from . import flash_attention as _flash
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return _flash.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=_interpret())
+
+
+def bus_attention(q, k, v, kv_mask, *, block_m: int = 8):
+    M = q.shape[0]
+    while M % block_m:
+        block_m //= 2
+    return _bus.bus_attention(q, k, v, kv_mask, block_m=max(block_m, 1),
+                              interpret=_interpret())
+
+
+def embedding_bag(table, idx, weights=None):
+    return _ebag.embedding_bag(table, idx, weights, interpret=_interpret())

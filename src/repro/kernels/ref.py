@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function mirrors the corresponding kernel's semantics exactly; kernel
+tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: [B, Sq, Hq, D]; k/v: [B, Sk, Hkv, D] (GQA: Hq % Hkv == 0)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] + (Sk - Sq) >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def bus_attention(q, k, v, kv_mask):
+    """BusLM fused segment attention.
+
+    q: [M, K, S, H, D]; k/v: [M, K, Sk, H, D] (Sk = S + K with the bus
+    columns appended); kv_mask: [M, K, Sk] key validity.
+    """
+    s = jnp.einsum("mkshd,mkthd->mkhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    s = jnp.where(kv_mask[:, :, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("mkhst,mkthd->mkshd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def embedding_bag(table, idx, weights=None):
+    """table: [V, d]; idx: [B, F, nnz] -> [B, F, d] weighted sums."""
+    emb = jnp.take(table, idx, axis=0)
+    if weights is not None:
+        emb = emb * weights[..., None].astype(emb.dtype)
+    return emb.sum(axis=-2)

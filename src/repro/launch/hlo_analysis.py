@@ -1,0 +1,314 @@
+"""HLO cost accounting that understands loops.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any scan-based
+model (layer loops, chunked losses, grad accumulation) is undercounted by
+the trip count, and collective ops inside loops are likewise invisible to a
+flat text scan. This module parses the optimized HLO text into computations,
+resolves loop trip counts from the loop-condition constants (lax.scan emits
+``lt(i, N)``), and aggregates
+
+  * matmul FLOPs            (dot ops: 2 * |result| * |contracted dims|)
+  * memory traffic          (sum of operand+result bytes per top-level op —
+                             the same no-reuse model XLA's own metric uses)
+  * collective bytes        (per type; ring "wire bytes" per device and the
+                             literal operand-size convention)
+
+multiplied through the call graph (while bodies x trips, fusions/calls x 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s*(%[\w\.\-]+)\s*=\s*(.*)$")
+# op name = first word followed by '(' that directly follows a shape/tuple
+# closer (']', '}', ')') — robust to tuple result types containing comments
+_OPNAME = re.compile(r"[\]\})]\s+([a-z][a-z0-9\-]*)\(")
+_OPERANDS = re.compile(r"%[\w\.\-]+")
+_RG_ILOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_RG_EXPL = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST = re.compile(r"constant\((\d+)\)")
+_TRIPS = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_list_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        n = _DTYPE_BYTES.get(m.group(1))
+        if n is None:
+            continue
+        k = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                k *= int(d)
+        total += n * k
+    return total
+
+
+def _shape_elems_first(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, 0
+    k = 1
+    if m.group(2):
+        dims = [int(d) for d in m.group(2).split(",")]
+        for d in dims:
+            k *= d
+    else:
+        dims = []
+    return dims, k
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_text: str
+    operands: list
+    line: str
+
+
+def parse_computations(hlo: str):
+    comps = {}
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not raw.startswith(" "):
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = {"instrs": [], "header": line,
+                              "entry": line.startswith("ENTRY")}
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OPNAME.search(rest)
+        if om is None:
+            fw = re.match(r"^\s*([a-z][a-z0-9\-]*)\(", rest)
+            if not fw:
+                continue
+            result_text, op, tail = "", fw.group(1), rest[fw.end():]
+        else:
+            result_text = rest[:om.start() + 1]
+            op = om.group(1)
+            tail = rest[om.end():]
+        # operands live inside the call parens: cut at the matching ')'
+        depth, end = 1, len(tail)
+        for i, ch in enumerate(tail):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERANDS.findall(tail[:end])
+        comps[cur]["instrs"].append(
+            Instr(name, op, result_text, operands, line))
+    return comps
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _RG_ILOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _RG_EXPL.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(cond_comp) -> int:
+    """lax.scan conditions are lt(i, N): take the constant compared."""
+    consts = {}
+    for ins in cond_comp["instrs"]:
+        cm = _CONST.search(ins.line)
+        if cm and "constant(" in ins.line:
+            consts[ins.name] = int(cm.group(1))
+    for ins in cond_comp["instrs"]:
+        if ins.op == "compare":
+            for o in ins.operands:
+                if o in consts:
+                    return max(consts[o], 1)
+    return max(consts.values(), default=1)
+
+
+def _quad_bytes(text: str) -> int:
+    """Bytes of attention-quadratic tensors: shapes whose two trailing dims
+    are both >= 1024 (the [.., Sq, Sk] probability/logit tiles). Used to
+    project the fused-flash-kernel memory term (kernels/flash_attention.py —
+    validated in interpret mode; Mosaic-only on this backend)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        if not m.group(2):
+            continue
+        dims = [int(d) for d in m.group(2).split(",")]
+        if len(dims) >= 2 and dims[-1] >= 1024 and dims[-2] >= 1024:
+            n = 1
+            for d in dims:
+                n *= d
+            total += n * _DTYPE_BYTES.get(m.group(1), 4)
+    return total
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    quad_bytes: float = 0.0
+    coll_wire: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_operand: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.quad_bytes += other.quad_bytes * mult
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] += v * mult
+        for k, v in other.coll_operand.items():
+            self.coll_operand[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    entry = next((n for n, c in comps.items() if c["entry"]), None)
+    memo = {}
+
+    def shape_table(comp):
+        tbl = {}
+        for ins in comp["instrs"]:
+            tbl[ins.name] = ins.result_text or ins.line.split("=", 1)[1]
+        return tbl
+
+    def comp_cost(name: str) -> Costs:
+        if name in memo:
+            return memo[name]
+        memo[name] = Costs()          # break cycles defensively
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        tbl = shape_table(comp)
+        c = Costs()
+        for ins in comp["instrs"]:
+            line = ins.line
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if ins.op.endswith("-done"):
+                    continue
+                result_bytes = _shape_list_bytes(ins.result_text)
+                gs = _group_size(line)
+                if base == "all-gather":
+                    wire = result_bytes * (gs - 1) / max(gs, 1)
+                    operand = result_bytes / max(gs, 1)
+                elif base == "all-reduce":
+                    wire = 2 * result_bytes * (gs - 1) / max(gs, 1)
+                    operand = result_bytes
+                elif base == "reduce-scatter":
+                    wire = result_bytes * (gs - 1)
+                    operand = result_bytes * gs
+                elif base == "all-to-all":
+                    wire = result_bytes * (gs - 1) / max(gs, 1)
+                    operand = result_bytes
+                else:  # collective-permute
+                    wire = result_bytes
+                    operand = result_bytes
+                c.coll_wire[base] += wire
+                c.coll_operand[base] += operand
+                c.coll_count[base] += 1
+                c.bytes += 2 * result_bytes
+                continue
+            if ins.op == "dot":
+                rdims, relems = _shape_elems_first(ins.result_text)
+                lhs_text = tbl.get(ins.operands[0], "") if ins.operands else ""
+                ldims, _ = _shape_elems_first(lhs_text)
+                contract = 1
+                mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                if mc and ldims:
+                    for d in mc.group(1).split(","):
+                        if d:
+                            contract *= ldims[int(d)]
+                c.flops += 2.0 * relems * contract
+                io = [tbl.get(o, "") for o in ins.operands] \
+                    + [ins.result_text]
+                c.bytes += sum(_shape_list_bytes(t) for t in io)
+                c.quad_bytes += sum(_quad_bytes(t) for t in io)
+                continue
+            if ins.op == "while":
+                body = re.search(r"body=(%[\w\.\-]+)", line)
+                tm = _TRIPS.search(line)     # XLA prints the trip count
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    cond = re.search(r"condition=(%[\w\.\-]+)", line)
+                    trips = _trip_count(comps[cond.group(1)]) if cond and \
+                        cond.group(1) in comps else 1
+                if body:
+                    c.add(comp_cost(body.group(1)), trips)
+                continue
+            if ins.op in ("fusion", "call", "conditional", "map",
+                          "reduce", "reduce-window", "sort", "scatter",
+                          "custom-call", "select-and-scatter"):
+                # descend for flops (dots inside), count own IO for bytes
+                for attr in ("calls", "to_apply", "branch_computations"):
+                    mm = re.search(attr + r"=\{?(%[\w\.\-]+)", line)
+                    if mm and mm.group(1) in comps:
+                        sub = comp_cost(mm.group(1))
+                        c.flops += sub.flops
+                        for k, v in sub.coll_wire.items():
+                            c.coll_wire[k] += v
+                        for k, v in sub.coll_operand.items():
+                            c.coll_operand[k] += v
+                        for k, v in sub.coll_count.items():
+                            c.coll_count[k] += v
+                io = [tbl.get(o, "") for o in ins.operands] \
+                    + [ins.result_text]
+                c.bytes += sum(_shape_list_bytes(t) for t in io)
+                c.quad_bytes += sum(_quad_bytes(t) for t in io)
+                continue
+            if ins.op in ("parameter", "constant", "tuple",
+                          "get-tuple-element", "bitcast", "after-all"):
+                continue
+            # generic op: operands + result traffic
+            io = [tbl.get(o, "") for o in ins.operands] + [ins.result_text]
+            c.bytes += sum(_shape_list_bytes(t) for t in io)
+            c.quad_bytes += sum(_quad_bytes(t) for t in io)
+        memo[name] = c
+        return c
+
+    total = comp_cost(entry) if entry else Costs()
+    return {
+        "flops": total.flops,
+        "bytes": total.bytes,
+        "quad_bytes": total.quad_bytes,
+        "coll_wire": dict(total.coll_wire),
+        "coll_operand": dict(total.coll_operand),
+        "coll_count": dict(total.coll_count),
+        "coll_wire_total": sum(total.coll_wire.values()),
+        "coll_operand_total": sum(total.coll_operand.values()),
+    }

@@ -1,0 +1,120 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+  compute term    = HLO_FLOPs_global   / (chips * peak_FLOPs)
+  memory term     = HLO_bytes_global   / (chips * HBM_bw)
+  collective term = collective_bytes   / (chips * link_bw)
+
+``compiled.cost_analysis()`` reports the per-device (post-SPMD) module, so
+global = per_device * chips and per-chip terms divide back out — we compute
+directly from the per-device numbers. Collective bytes are parsed from the
+optimized HLO text (operand sizes of all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute), which cost_analysis does not expose.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link (ICI)
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_detail: dict
+    peak_memory_per_chip: float
+    model_flops: float
+    quad_bytes_per_chip: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_memory_flash(self) -> float:
+        """Memory term with attention-quadratic tensor traffic removed —
+        the projection of running the Pallas flash kernel (which keeps the
+        [Sq, Sk] tiles in VMEM) instead of the XLA graph attention."""
+        return max(self.bytes_per_chip - self.quad_bytes_per_chip, 0.0) \
+            / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower-bound step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_global — remat/redundancy waste detector."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_upper_bound(self) -> float:
+        """MODEL_FLOPS / (chips * peak * step_time_lb)."""
+        denom = self.chips * PEAK_FLOPS * self.step_time_lb
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_detail": self.coll_detail,
+            "peak_memory_per_chip": self.peak_memory_per_chip,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_memory_flash": self.t_memory_flash,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_lb": self.step_time_lb,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_upper_bound": self.mfu_upper_bound,
+        }
+
+
+def from_compiled(cell, compiled, mesh_name: str, chips: int) -> Roofline:
+    """Terms come from the loop-aware HLO analyzer (launch.hlo_analysis);
+    ``compiled.cost_analysis()`` counts while bodies once and is only kept
+    as a cross-check (it under-counts every scanned layer stack)."""
+    from . import hlo_analysis as ha
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    res = ha.analyze(hlo)
+    coll = dict(res["coll_wire"])
+    coll.update({f"n_{k}": v for k, v in res["coll_count"].items()})
+    coll["operand_convention_total"] = res["coll_operand_total"]
+    peak = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+            + mem.output_size_in_bytes) if mem is not None else 0
+    return Roofline(
+        arch=cell.arch, shape=cell.shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=float(res["flops"]), bytes_per_chip=float(res["bytes"]),
+        coll_bytes_per_chip=float(res["coll_wire_total"]), coll_detail=coll,
+        peak_memory_per_chip=float(peak),
+        model_flops=float(cell.meta.get("model_flops", 0.0)),
+        quad_bytes_per_chip=float(res.get("quad_bytes", 0.0)))

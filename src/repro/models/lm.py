@@ -1,0 +1,335 @@
+"""Generic transformer LM covering all five assigned LM architectures:
+
+  qwen3-14b    dense, GQA(kv=8), qk_norm, RoPE
+  chatglm3-6b  dense, GQA(kv=2), partial (2D) RoPE, QKV bias
+  qwen2-72b    dense, GQA(kv=8), QKV bias
+  dbrx-132b    MoE 16e top-4, GQA(kv=8)
+  llama4-scout MoE 16e top-1 + shared expert, iRoPE (3 chunked-local layers
+               + 1 global NoPE layer per super-block)
+
+Pre-norm blocks, SwiGLU FFN, scan over stacked layer params (keeps HLO small
+— required for tractable 512-device dry-run compiles), optional remat.
+
+Entry points: ``init`` / ``forward`` / ``lm_loss`` (train), ``prefill`` and
+``decode_step`` (serve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import (AttnConfig, MoEConfig, attention, decode_attention,
+                      dense, embed, init_attention, init_dense,
+                      init_embedding, init_kv_cache, init_moe, init_rmsnorm,
+                      moe_dense, moe_ep, moe_gather, rmsnorm)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_fraction: float = 1.0
+    rope_theta: float = 1e6
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_impl: str = "gather"          # dense | gather | ep
+    # iRoPE / chunked-local attention (llama4)
+    chunk_size: Optional[int] = None
+    global_every: Optional[int] = None  # every Nth layer is global+NoPE
+    attn_block_q: Optional[int] = None  # query-blocked attention (H3)
+    remat: bool = False
+    loss_chunk: int = 0                 # sequence-chunked CE (0 = off); keeps
+                                        # [B, chunk, V] logits instead of
+                                        # [B, S, V] — required for V ~ 150k
+    dtype: str = "bfloat16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def attn_cfg(self, *, local: bool = False) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, n_kv=self.n_kv,
+            head_dim=self.hd, qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+            rope_fraction=0.0 if (self.global_every and not local)
+            else self.rope_fraction,
+            rope_theta=self.rope_theta, causal=True,
+            chunk_size=self.chunk_size if local else None,
+            block_q=self.attn_block_q)
+
+    def moe_cfg(self) -> MoEConfig:
+        return MoEConfig(d_model=self.d_model, d_ff=self.d_ff,
+                         n_experts=self.n_experts, top_k=self.top_k)
+
+    def param_count(self) -> int:
+        d, f, L, hd = self.d_model, self.d_ff, self.n_layers, self.hd
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv * hd) \
+            + (self.n_heads * hd) * d
+        if self.is_moe:
+            ffn = 3 * d * f * (self.n_experts + self.n_shared_experts) + d * self.n_experts
+        else:
+            ffn = 3 * d * f
+        return L * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+    def active_param_count(self) -> int:
+        if not self.is_moe:
+            return self.param_count()
+        d, f, L = self.d_model, self.d_ff, self.n_layers
+        attn = d * (self.n_heads * self.hd) + 2 * d * (self.n_kv * self.hd) \
+            + (self.n_heads * self.hd) * d
+        ffn = 3 * d * f * (self.top_k + self.n_shared_experts) + d * self.n_experts
+        return L * (attn + ffn + 2 * d) + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: LMConfig, param_dtype):
+    ks = jax.random.split(key, 6)
+    p = {
+        "attn": init_attention(ks[0], cfg.attn_cfg(local=True), param_dtype),
+        "ln1": init_rmsnorm(ks[1], cfg.d_model, param_dtype),
+        "ln2": init_rmsnorm(ks[2], cfg.d_model, param_dtype),
+    }
+    if cfg.is_moe:
+        p["moe"] = init_moe(ks[3], cfg.moe_cfg(), param_dtype)
+        if cfg.n_shared_experts:
+            p["shared"] = _init_swiglu(ks[4], cfg.d_model,
+                                       cfg.d_ff * cfg.n_shared_experts,
+                                       param_dtype)
+    else:
+        p["ffn"] = _init_swiglu(ks[3], cfg.d_model, cfg.d_ff, param_dtype)
+    return p
+
+
+def _init_swiglu(key, d, f, param_dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"gate": init_dense(k1, d, f, use_bias=False, stddev=0.02,
+                               dtype=param_dtype),
+            "up": init_dense(k2, d, f, use_bias=False, stddev=0.02,
+                             dtype=param_dtype),
+            "down": init_dense(k3, f, d, use_bias=False, stddev=0.02,
+                               dtype=param_dtype)}
+
+
+def _swiglu(p, x):
+    return dense(p["down"], jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x))
+
+
+def init(key, cfg: LMConfig, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    return {
+        "embed": init_embedding(ks[0], cfg.vocab, cfg.d_model, dtype=param_dtype),
+        "head": init_dense(ks[1], cfg.d_model, cfg.vocab, use_bias=False,
+                           stddev=0.02, dtype=param_dtype),
+        "ln_f": init_rmsnorm(ks[2], cfg.d_model, param_dtype),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg, param_dtype))(
+            jnp.stack(ks[3:])),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _ffn_or_moe(layer, hn, cfg: LMConfig, mesh=None):
+    if cfg.is_moe:
+        mcfg = cfg.moe_cfg()
+        if cfg.moe_impl == "ep" and mesh is not None:
+            y, aux = moe_ep(layer["moe"], hn, mcfg, mesh)
+        elif cfg.moe_impl == "dense":
+            y, aux = moe_dense(layer["moe"], hn, mcfg)
+        else:
+            y, aux = moe_gather(layer["moe"], hn, mcfg)
+        if cfg.n_shared_experts:
+            y = y + _swiglu(layer["shared"], hn)
+        return y, aux
+    return _swiglu(layer["ffn"], hn), jnp.float32(0.0)
+
+
+def _block(layer, x, cfg: LMConfig, *, local: bool, mesh=None):
+    from repro.distributed import sharding as shx
+    x = shx.constrain(x, "residual")
+    h = attention(layer["attn"], rmsnorm(layer["ln1"], x),
+                  cfg.attn_cfg(local=local))
+    x = x + h
+    hn = rmsnorm(layer["ln2"], x)
+    y, aux = _ffn_or_moe(layer, hn, cfg, mesh)
+    return shx.constrain(x + y, "residual"), aux
+
+
+def _stack_superblocks(layers, ge: int):
+    return jax.tree.map(lambda a: a.reshape((a.shape[0] // ge, ge) + a.shape[1:]),
+                        layers)
+
+
+def backbone(params, cfg: LMConfig, tokens, *, mesh=None):
+    """tokens: [B, S] -> hidden [B, S, d] (pre-head) + MoE aux."""
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dtype=dt)
+    ge = cfg.global_every
+
+    if ge:
+        stacked = _stack_superblocks(params["layers"], ge)
+
+        def superblock(x, sb):
+            aux = jnp.float32(0.0)
+            for i in range(ge):
+                layer = jax.tree.map(lambda a: a[i], sb)
+                local = (i != ge - 1)     # last layer in super-block is global
+                x, a = _block(layer, x, cfg, local=local, mesh=mesh)
+                aux = aux + a
+            return x, aux
+
+        body = jax.checkpoint(superblock) if cfg.remat else superblock
+        x, auxs = jax.lax.scan(body, x, stacked)
+    else:
+        def block(x, layer):
+            return _block(layer, x, cfg, local=True, mesh=mesh)
+
+        body = jax.checkpoint(block) if cfg.remat else block
+        x, auxs = jax.lax.scan(body, x, params["layers"])
+
+    x = rmsnorm(params["ln_f"], x)
+    return x, auxs.sum()
+
+
+def forward(params, cfg: LMConfig, tokens, *, mesh=None):
+    """tokens: [B, S] -> logits [B, S, V]; also returns aux (MoE balance)."""
+    x, aux = backbone(params, cfg, tokens, mesh=mesh)
+    logits = dense(params["head"], x, dtype=jnp.dtype(cfg.dtype))
+    return logits, aux
+
+
+def _nll(head, x, labels):
+    """x: [..., d]; labels ints (-100 ignore) -> (nll_sum, count)."""
+    logits = dense(head, x).astype(jnp.float32)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (nll * valid).sum(), valid.sum()
+
+
+def lm_loss(params, cfg: LMConfig, batch, *, mesh=None, aux_weight=0.01):
+    """batch: {tokens [B, S], labels [B, S] (-100 = ignore)}.
+
+    With ``loss_chunk`` set, the unembedding + CE run chunk-by-chunk over
+    the sequence under a scan + checkpoint, so only [B, chunk, V] logits are
+    live at once (forward and backward)."""
+    x, aux = backbone(params, cfg, batch["tokens"], mesh=mesh)
+    labels = batch["labels"]
+    B, S, d = x.shape
+    c = cfg.loss_chunk
+    if c and S % c == 0 and S > c:
+        n = S // c
+        xs = x.reshape(B, n, c, d).swapaxes(0, 1)        # [n, B, c, d]
+        ls = labels.reshape(B, n, c).swapaxes(0, 1)
+
+        @jax.checkpoint
+        def chunk(carry, inp):
+            s, k = carry
+            xc, lc = inp
+            ds, dk = _nll(params["head"], xc, lc)
+            return (s + ds, k + dk), None
+
+        (nll_sum, count), _ = jax.lax.scan(chunk, (jnp.float32(0),
+                                                   jnp.int32(0)), (xs, ls))
+    else:
+        nll_sum, count = _nll(params["head"], x, labels)
+    loss = nll_sum / jnp.maximum(count, 1)
+    return loss + aux_weight * aux, {"lm_loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               *, quant: bool = False):
+    """Stacked KV cache [L, B, S_max, Hkv, hd] (x2 for k and v).
+
+    quant=True: int8 values + per-token-per-head fp32 scales (halves the
+    decode memory roofline — EXPERIMENTS.md §Perf/H4)."""
+    from repro.nn.attention import init_kv_cache_q8
+    one = (init_kv_cache_q8(batch, max_len, cfg.attn_cfg()) if quant
+           else init_kv_cache(batch, max_len, cfg.attn_cfg(), dtype))
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), one)
+
+
+def prefill(params, cfg: LMConfig, tokens, *, mesh=None):
+    """Full-sequence forward returning last-position logits (serving prefill).
+
+    The KV cache for the decode phase is produced by the same projections;
+    for the dry-run cost model the logits path is the representative load.
+    """
+    logits, _ = forward(params, cfg, tokens, mesh=mesh)
+    return logits[:, -1]
+
+
+def decode_step(params, cfg: LMConfig, token, cache, cache_index, *,
+                mesh=None):
+    """One-token decode. token: [B, 1] ids; cache: stacked KV [L, ...];
+    cache_index: scalar count of valid cache entries. Returns (logits, cache').
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], token, dtype=dt)
+    ge = cfg.global_every
+
+    def one_layer(x, layer, cache_l, local):
+        acfg = cfg.attn_cfg(local=local)
+        h, new_cache = decode_attention(
+            layer["attn"], rmsnorm(layer["ln1"], x), cache_l, cache_index, acfg)
+        x = x + h
+        hn = rmsnorm(layer["ln2"], x)
+        y, _ = _ffn_or_moe(layer, hn, cfg, mesh)
+        return x + y, new_cache
+
+    if ge:
+        stacked = _stack_superblocks(params["layers"], ge)
+        cache_s = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] // ge, ge) + a.shape[1:]), cache)
+
+        def superblock(x, inp):
+            sb, cache_sb = inp
+            new_caches = []
+            for i in range(ge):
+                layer = jax.tree.map(lambda a: a[i], sb)
+                cl = jax.tree.map(lambda a: a[i], cache_sb)
+                x, nc = one_layer(x, layer, cl, local=(i != ge - 1))
+                new_caches.append(nc)
+            stacked_nc = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+            return x, stacked_nc
+
+        x, new_cache = jax.lax.scan(superblock, x, (stacked, cache_s))
+        new_cache = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] * ge,) + a.shape[2:]), new_cache)
+    else:
+        def body(x, inp):
+            layer, cache_l = inp
+            return one_layer(x, layer, cache_l, local=True)
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+
+    x = rmsnorm(params["ln_f"], x)
+    logits = dense(params["head"], x, dtype=dt)
+    return logits[:, -1], new_cache

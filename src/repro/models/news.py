@@ -1,0 +1,189 @@
+"""Baseline news recommenders (paper §5.1.3): NPA, NAML, LSTUR, NRMS.
+
+Small-scale text encoders (CNN / self-attention) + per-method user encoders,
+trained with the *conventional* workflow (impression click loss) — these are
+the Table-3 baselines that SpeedyFeed's PLM recommenders are compared against.
+
+Batch layout (conventional): hist_tokens [B, L, K, S], hist_mask [B, L],
+cand_tokens [B, C, K, S], label [B], cand_mask [B, C], user_id [B].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import (AttnConfig, attention, dense, embed, init_attention,
+                      init_dense, init_embedding)
+from repro.core.plm import _init_addattn, additive_attention
+from repro.core.loss import click_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class NewsBaselineConfig:
+    name: str                  # npa | naml | lstur | nrms
+    vocab: int = 30522
+    n_users: int = 100_000
+    d_word: int = 64
+    d_news: int = 64
+    n_heads: int = 4           # nrms
+    cnn_width: int = 3
+    n_views: int = 3           # naml: title/abstract/body == K segments
+    dtype: str = "float32"
+
+
+def _init_cnn(key, d_in, d_out, width, param_dtype):
+    k1, k2 = jax.random.split(key)
+    w = (jax.random.normal(k1, (width, d_in, d_out)) * 0.02).astype(param_dtype)
+    return {"w": w, "b": jnp.zeros((d_out,), param_dtype)}
+
+
+def _cnn(p, x):
+    """x: [B, S, d_in] -> [B, S, d_out] (SAME padding 1D conv)."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"))
+    return jax.nn.relu(y + p["b"])
+
+
+def init(key, cfg: NewsBaselineConfig, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 12)
+    p = {"word_emb": init_embedding(ks[0], cfg.vocab, cfg.d_word,
+                                    dtype=param_dtype)}
+    if cfg.name == "nrms":
+        acfg = _attn_cfg(cfg)
+        p["news_attn"] = init_attention(ks[1], acfg, param_dtype)
+        p["news_pool"] = _init_addattn(ks[2], cfg.d_news, param_dtype)
+        p["user_attn"] = init_attention(ks[3], acfg, param_dtype)
+        p["user_pool"] = _init_addattn(ks[4], cfg.d_news, param_dtype)
+        p["word_proj"] = init_dense(ks[5], cfg.d_word, cfg.d_news,
+                                    dtype=param_dtype)
+    elif cfg.name == "naml":
+        p["view_cnn"] = [_init_cnn(k, cfg.d_word, cfg.d_news, cfg.cnn_width,
+                                   param_dtype)
+                         for k in jax.random.split(ks[1], cfg.n_views)]
+        p["word_pool"] = _init_addattn(ks[2], cfg.d_news, param_dtype)
+        p["view_pool"] = _init_addattn(ks[3], cfg.d_news, param_dtype)
+        p["user_pool"] = _init_addattn(ks[4], cfg.d_news, param_dtype)
+    elif cfg.name == "npa":
+        p["cnn"] = _init_cnn(ks[1], cfg.d_word, cfg.d_news, cfg.cnn_width,
+                             param_dtype)
+        p["user_emb"] = init_embedding(ks[2], cfg.n_users, cfg.d_news,
+                                       dtype=param_dtype)
+        p["q_word"] = init_dense(ks[3], cfg.d_news, cfg.d_news, dtype=param_dtype)
+        p["q_news"] = init_dense(ks[4], cfg.d_news, cfg.d_news, dtype=param_dtype)
+        p["w_proj"] = init_dense(ks[5], cfg.d_news, cfg.d_news, dtype=param_dtype)
+    elif cfg.name == "lstur":
+        p["cnn"] = _init_cnn(ks[1], cfg.d_word, cfg.d_news, cfg.cnn_width,
+                             param_dtype)
+        p["word_pool"] = _init_addattn(ks[2], cfg.d_news, param_dtype)
+        p["user_emb"] = init_embedding(ks[3], cfg.n_users, cfg.d_news,
+                                       dtype=param_dtype)
+        p["gru"] = _init_gru(ks[4], cfg.d_news, cfg.d_news, param_dtype)
+    else:
+        raise ValueError(cfg.name)
+    return p
+
+
+def _attn_cfg(cfg) -> AttnConfig:
+    return AttnConfig(d_model=cfg.d_news, n_heads=cfg.n_heads,
+                      n_kv=cfg.n_heads, head_dim=cfg.d_news // cfg.n_heads,
+                      qkv_bias=True, out_bias=True, rope_fraction=0.0,
+                      causal=False)
+
+
+def _init_gru(key, d_in, d_h, param_dtype):
+    ks = jax.random.split(key, 2)
+    return {"wx": init_dense(ks[0], d_in, 3 * d_h, dtype=param_dtype),
+            "wh": init_dense(ks[1], d_h, 3 * d_h, use_bias=False,
+                             dtype=param_dtype)}
+
+
+def _gru_scan(p, xs, h0, mask):
+    """xs: [B, L, d]; h0: [B, d]; mask: [B, L] -> final h [B, d]."""
+    def step(h, inp):
+        x, m = inp
+        gx = dense(p["wx"], x)
+        gh = dense(p["wh"], h)
+        xz, xr, xn = jnp.split(gx, 3, -1)
+        hz, hr, hn = jnp.split(gh, 3, -1)
+        z = jax.nn.sigmoid(xz + hz)
+        r = jax.nn.sigmoid(xr + hr)
+        n = jnp.tanh(xn + r * hn)
+        h_new = (1 - z) * n + z * h
+        h = jnp.where(m[:, None], h_new, h)
+        return h, None
+
+    h, _ = jax.lax.scan(step, h0, (xs.swapaxes(0, 1), mask.swapaxes(0, 1)))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# news encoders -> [.., d_news]; tokens [..., K, S]
+# ---------------------------------------------------------------------------
+
+def _flat_tokens(tokens):
+    sh = tokens.shape
+    return tokens.reshape(sh[:-2] + (sh[-2] * sh[-1],))
+
+
+def encode_news(params, cfg: NewsBaselineConfig, tokens, user_vec=None):
+    lead = tokens.shape[:-2]
+    if cfg.name == "naml":
+        K, S = tokens.shape[-2:]
+        t = tokens.reshape((-1, K, S))
+        views = []
+        for j in range(cfg.n_views):
+            w = embed(params["word_emb"], t[:, j])           # [N, S, dw]
+            c = _cnn(params["view_cnn"][j], w)
+            views.append(additive_attention(params["word_pool"], c,
+                                            t[:, j] != 0))
+        v = jnp.stack(views, axis=1)                          # [N, K, d]
+        e = additive_attention(params["view_pool"], v,
+                               (t != 0).any(-1))
+        return e.reshape(lead + (cfg.d_news,))
+    flat = _flat_tokens(tokens)
+    t = flat.reshape((-1, flat.shape[-1]))
+    mask = t != 0
+    w = embed(params["word_emb"], t)
+    if cfg.name == "nrms":
+        h = dense(params["word_proj"], w)
+        h = h + attention(params["news_attn"], h, _attn_cfg(cfg), mask=mask)
+        e = additive_attention(params["news_pool"], h, mask)
+    elif cfg.name == "npa":
+        c = _cnn(params["cnn"], w)
+        q = jnp.tanh(dense(params["q_word"], user_vec))       # [B, d]
+        n_rep = t.shape[0] // q.shape[0]
+        qr = jnp.repeat(q, n_rep, axis=0)                     # align [N, d]
+        a = jnp.einsum("nsd,nd->ns", c, qr)
+        a = jnp.where(mask, a, -1e30)
+        e = jnp.einsum("ns,nsd->nd", jax.nn.softmax(a, -1), c)
+        e = dense(params["w_proj"], e)
+    else:  # lstur
+        c = _cnn(params["cnn"], w)
+        e = additive_attention(params["word_pool"], c, mask)
+    return e.reshape(lead + (cfg.d_news,))
+
+
+def loss(params, cfg: NewsBaselineConfig, batch):
+    B, L = batch["hist_mask"].shape
+    uvec = None
+    if cfg.name in ("npa", "lstur"):
+        uvec = embed(params["user_emb"], batch["user_id"])    # [B, d]
+    theta = encode_news(params, cfg, batch["hist_tokens"], uvec)  # [B, L, d]
+    cand = encode_news(params, cfg, batch["cand_tokens"], uvec)   # [B, C, d]
+    mask = batch["hist_mask"]
+    if cfg.name == "nrms":
+        h = theta + attention(params["user_attn"], theta, _attn_cfg(cfg),
+                              mask=mask)
+        user = additive_attention(params["user_pool"], h, mask)
+    elif cfg.name == "npa":
+        q = jnp.tanh(dense(params["q_news"], uvec))
+        a = jnp.where(mask, jnp.einsum("bld,bd->bl", theta, q), -1e30)
+        user = jnp.einsum("bl,bld->bd", jax.nn.softmax(a, -1), theta)
+    elif cfg.name == "lstur":
+        user = _gru_scan(params["gru"], theta, uvec, mask)    # long+short term
+    else:  # naml
+        user = additive_attention(params["user_pool"], theta, mask)
+    return click_loss(user, cand, batch["label"], batch["cand_mask"])

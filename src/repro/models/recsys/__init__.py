@@ -1,0 +1,2 @@
+from .common import SparseSpec, bce_loss, criteo_like_vocab, init_tables, lookup
+from . import ctr, bert4rec

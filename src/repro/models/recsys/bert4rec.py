@@ -1,0 +1,189 @@
+"""BERT4Rec [1904.06690]: bidirectional transformer over item sequences with
+masked-item (Cloze) prediction.
+
+SpeedyFeed connection (DESIGN.md §5): this is the assigned architecture where
+the paper's technique applies most directly — the Cloze objective already IS
+one-shot multi-position prediction (the masked analogue of autoregressive
+user modeling, Eq. 5), and the sampled-negative softmax below matches the
+paper's loss. When items carry content, ``item_embeddings`` can be produced
+by the SpeedyFeed centralized+cached BusLM encoder instead of the ID table.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import (AttnConfig, attention, dense, embed, init_attention,
+                      init_dense, init_embedding, init_layernorm, layernorm)
+
+
+@dataclasses.dataclass(frozen=True)
+class Bert4RecConfig:
+    name: str
+    n_items: int
+    embed_dim: int = 64
+    n_blocks: int = 2
+    n_heads: int = 2
+    seq_len: int = 200
+    d_ff: int = 256
+    n_mask: int = 40          # static masked-position budget per sequence
+    n_neg: int = 100          # sampled negatives per prediction
+    dtype: str = "float32"
+
+    @property
+    def attn(self) -> AttnConfig:
+        return AttnConfig(d_model=self.embed_dim, n_heads=self.n_heads,
+                          n_kv=self.n_heads,
+                          head_dim=self.embed_dim // self.n_heads,
+                          qkv_bias=True, out_bias=True, rope_fraction=0.0,
+                          causal=False)
+
+    @property
+    def mask_token(self) -> int:
+        return self.n_items           # one extra row in the table
+
+
+def _padded_items(n: int) -> int:
+    """Row-pad the item table for mesh divisibility (dead pad rows)."""
+    return -(-(n + 1) // 4096) * 4096
+
+
+def init(key, cfg: Bert4RecConfig, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 2 + cfg.n_blocks)
+    p = {
+        "item_emb": init_embedding(ks[0], _padded_items(cfg.n_items),
+                                   cfg.embed_dim, dtype=param_dtype),
+        "pos_emb": init_embedding(ks[1], cfg.seq_len, cfg.embed_dim,
+                                  dtype=param_dtype),
+        "blocks": [],
+    }
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[2 + i], 5)
+        p["blocks"].append({
+            "attn": init_attention(kb[0], cfg.attn, param_dtype),
+            "ln1": init_layernorm(kb[1], cfg.embed_dim, param_dtype),
+            "up": init_dense(kb[2], cfg.embed_dim, cfg.d_ff, dtype=param_dtype),
+            "down": init_dense(kb[3], cfg.d_ff, cfg.embed_dim, dtype=param_dtype),
+            "ln2": init_layernorm(kb[4], cfg.embed_dim, param_dtype),
+        })
+    return p
+
+
+def encode(params, cfg: Bert4RecConfig, tokens, mask=None):
+    """tokens: [B, S] (0 = pad) -> hidden [B, S, d]."""
+    if mask is None:
+        mask = tokens != 0
+    h = embed(params["item_emb"], tokens)
+    h = h + embed(params["pos_emb"], jnp.arange(tokens.shape[1]))[None]
+    for blk in params["blocks"]:
+        a = attention(blk["attn"], h, cfg.attn, mask=mask)
+        h = layernorm(blk["ln1"], h + a)
+        f = dense(blk["down"], jax.nn.gelu(dense(blk["up"], h)))
+        h = layernorm(blk["ln2"], h + f)
+    return h
+
+
+def loss(params, cfg: Bert4RecConfig, batch):
+    """Cloze loss with sampled negatives.
+
+    batch: tokens [B,S] (mask token at masked slots), mask_pos [B,n_mask],
+    labels [B,n_mask] (true item ids), mask_valid [B,n_mask],
+    neg [B,n_mask,n_neg] sampled negative item ids.
+    """
+    h = encode(params, cfg, batch["tokens"])
+    hp = jnp.take_along_axis(h, batch["mask_pos"][..., None], axis=1)  # [B,m,d]
+    table = params["item_emb"]["table"]
+    pos_e = jnp.take(table, batch["labels"], axis=0)
+    neg_e = jnp.take(table, batch["neg"], axis=0)
+    pos = jnp.einsum("bmd,bmd->bm", hp, pos_e).astype(jnp.float32)
+    neg = jnp.einsum("bmd,bmnd->bmn", hp, neg_e).astype(jnp.float32)
+    logits = jnp.concatenate([pos[..., None], neg], axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=-1)[..., 0]
+    valid = batch["mask_valid"]
+    n = jnp.maximum(valid.sum(), 1)
+    l = -(logp * valid).sum() / n
+    acc = ((logits.argmax(-1) == 0) & valid).sum() / n
+    return l, {"cloze_acc": acc}
+
+
+def user_embedding(params, cfg: Bert4RecConfig, tokens):
+    """Sequence representation at the final (mask-appended) position."""
+    h = encode(params, cfg, tokens)
+    lengths = (tokens != 0).sum(axis=1)
+    idx = jnp.clip(lengths - 1, 0, cfg.seq_len - 1)
+    return jnp.take_along_axis(h, idx[:, None, None], axis=1)[:, 0]
+
+
+def serve(params, cfg: Bert4RecConfig, batch, *, k: int = 100):
+    """Score users against the full item table -> top-k (serve/retrieval)."""
+    u = user_embedding(params, cfg, batch["tokens"])          # [B, d]
+    scores = u @ params["item_emb"]["table"][:cfg.n_items].T.astype(u.dtype)
+    return jax.lax.top_k(scores, k)
+
+
+def serve_sharded(params, cfg: Bert4RecConfig, batch, mesh, *, k: int = 100,
+                  row_chunk: int = 1024):
+    """Two-stage sharded top-k (EXPERIMENTS.md §Perf/H2).
+
+    The naive serve path materializes + all-gathers a [B, V] score matrix
+    (V = 3M): TBs of HBM and ICI at serve_bulk scale. Instead:
+      1. each model shard scores its V/16 item slice in row chunks of
+         ``row_chunk`` users (bounded VMEM/HBM working set),
+      2. per-shard local top-k -> [B_loc, k],
+      3. all-gather only the k winners per shard ([B_loc, shards*k]) and
+         re-top-k.
+    Collective bytes drop by ~V/(shards*k) (~1900x for V=3M, k=100).
+    """
+    from jax.sharding import PartitionSpec as P
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    n_model = axes["model"]
+    table = params["item_emb"]["table"]
+    V = table.shape[0]
+    assert V % n_model == 0
+    v_loc = V // n_model
+
+    u = user_embedding(params, cfg, batch["tokens"])          # [B, d] (dp)
+
+    def local_fn(u_loc, t_loc):
+        shard = jax.lax.axis_index("model")
+        B_loc, d = u_loc.shape
+        c = min(row_chunk, B_loc)
+        n_chunks = max(B_loc // c, 1)
+
+        def score_chunk(uc):
+            s = uc @ t_loc.T.astype(uc.dtype)                 # [c, V/16]
+            # mask pad rows and out-of-catalog ids on the last shard
+            gidx = shard * v_loc + jnp.arange(v_loc)
+            s = jnp.where((gidx < cfg.n_items)[None, :], s, -jnp.inf)
+            vals, idx = jax.lax.top_k(s, k)
+            return vals, gidx[idx]
+
+        vals, gids = jax.lax.map(score_chunk,
+                                 u_loc.reshape(n_chunks, -1, d))
+        vals = vals.reshape(B_loc, k)
+        gids = gids.reshape(B_loc, k)
+        # stage 2: gather the per-shard winners and merge
+        av = jax.lax.all_gather(vals, "model", axis=1)        # [B, S, k]
+        ai = jax.lax.all_gather(gids, "model", axis=1)
+        fv, fi = jax.lax.top_k(av.reshape(B_loc, -1), k)
+        fids = jnp.take_along_axis(ai.reshape(B_loc, -1), fi, axis=1)
+        return fv, fids
+
+    # after the stage-2 merge every model shard holds identical winners;
+    # shard_map cannot infer that statically -> check_vma=False
+    return jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None), P("model", None)),
+        out_specs=(P(dp, None), P(dp, None)),
+        check_vma=False)(u, table)
+
+
+def retrieval(params, cfg: Bert4RecConfig, batch, cand_ids, *, k: int = 100):
+    """retrieval_cand shape: 1 query vs n_candidates item ids (batched dot)."""
+    u = user_embedding(params, cfg, batch["tokens"])          # [1, d]
+    ce = jnp.take(params["item_emb"]["table"], cand_ids, axis=0)  # [N, d]
+    scores = jnp.einsum("bd,nd->bn", u, ce)
+    return jax.lax.top_k(scores, k)

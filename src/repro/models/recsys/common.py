@@ -1,0 +1,97 @@
+"""Shared recsys substrate: sparse-feature embedding stacks.
+
+Embedding tables are the hot path (assignment §RecSys): [V, d] tables,
+fixed-multi-hot lookups via EmbeddingBag (take + segment_sum — JAX has no
+native EmbeddingBag). Tables are row-sharded over the ``model`` mesh axis in
+the big configs (Megatron embedding pattern: masked local gather + psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import embedding_bag, init_embedding, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseSpec:
+    n_fields: int
+    vocab_sizes: tuple      # per-field rows
+    embed_dim: int
+    nnz: int = 1            # multi-hot width (static, padded)
+
+    @property
+    def total_rows(self) -> int:
+        return sum(self.vocab_sizes)
+
+
+def uniform_vocab(n_fields: int, vocab: int) -> tuple:
+    return tuple([vocab] * n_fields)
+
+
+def criteo_like_vocab(n_fields: int = 26, *, scale: float = 1.0) -> tuple:
+    """Long-tailed per-field vocab sizes shaped like Criteo's 26 fields."""
+    base = [7912889, 33823, 17139, 7339, 20046, 4, 7105, 1382, 63, 5554114,
+            582469, 245828, 11, 2209, 10667, 104, 4, 968, 15, 8165896,
+            2675940, 7156453, 302516, 12022, 97, 35][:n_fields]
+    while len(base) < n_fields:
+        base.append(10000)
+    return tuple(max(4, int(v * scale)) for v in base)
+
+
+ROW_PAD = 4096   # fused tables are padded to a multiple (mesh divisibility:
+                 # 4096 % any axis product up to 512 == 0); pad rows are dead
+
+
+def padded_rows(total: int) -> int:
+    return -(-total // ROW_PAD) * ROW_PAD
+
+
+def init_tables(key, spec: SparseSpec, param_dtype=jnp.float32,
+                *, fused: bool = True):
+    """One fused [sum(V_f), d] table (single sharded array — production
+    layout) with per-field row offsets, used via offset-shifted indices."""
+    if fused:
+        table = normal_init(key, (padded_rows(spec.total_rows),
+                                  spec.embed_dim), 0.02, param_dtype)
+        return {"fused": table}
+    ks = jax.random.split(key, spec.n_fields)
+    return {f"f{i}": init_embedding(ks[i], spec.vocab_sizes[i],
+                                    spec.embed_dim, dtype=param_dtype)
+            for i in range(spec.n_fields)}
+
+
+def field_offsets(spec: SparseSpec):
+    off = [0]
+    for v in spec.vocab_sizes[:-1]:
+        off.append(off[-1] + v)
+    return jnp.asarray(off, jnp.int32)
+
+
+def lookup(tables, spec: SparseSpec, idx, weights=None, *, impl="xla"):
+    """idx: [B, F, nnz] per-field local indices -> [B, F, d].
+
+    Fused layout shifts indices by per-field offsets into the single table.
+    """
+    if "fused" in tables:
+        shifted = idx + field_offsets(spec)[None, :, None]
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            return kops.embedding_bag(tables["fused"], shifted, weights)
+        return embedding_bag(tables["fused"], shifted, weights)
+    outs = [embedding_bag(tables[f"f{i}"]["table"], idx[:, i],
+                          None if weights is None else weights[:, i])
+            for i in range(spec.n_fields)]
+    return jnp.stack(outs, axis=1)
+
+
+def bce_loss(logits, labels):
+    """Binary cross-entropy on logits [B] vs labels [B] in {0,1}."""
+    lf = logits.astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(lf, 0) - lf * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(lf))))
+    acc = jnp.mean((lf > 0) == (labels > 0.5))
+    return loss, {"bce": loss, "acc": acc}

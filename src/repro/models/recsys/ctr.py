@@ -1,0 +1,142 @@
+"""CTR models: Wide&Deep [1606.07792], DLRM [1906.00091], DCN-v2 [2008.13535].
+
+One module: the three models share the embedding stack and differ in the
+interaction op (concat / dot / cross) — exactly the taxonomy's recsys
+decomposition. Batch layout:
+  dense      [B, n_dense]  float
+  sparse_idx [B, F, nnz]   int32 (per-field local ids)
+  sparse_w   [B, F, nnz]   float (0 = padded slot)
+  label      [B]           float {0,1}
+
+``retrieval`` scores one query against a precomputed candidate matrix
+(batched dot + top_k — the retrieval_cand shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import dense as dense_layer
+from repro.nn import init_dense, init_mlp, mlp, normal_init
+from .common import SparseSpec, bce_loss, init_tables, lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class CTRConfig:
+    name: str
+    sparse: SparseSpec
+    n_dense: int
+    interaction: str                  # concat | dot | cross
+    mlp_dims: tuple                   # deep tower
+    bot_mlp: tuple = ()               # dlrm bottom mlp over dense feats
+    top_mlp: tuple = ()               # dlrm top mlp
+    n_cross_layers: int = 0           # dcn-v2
+    wide: bool = False                # wide&deep linear part
+    dtype: str = "float32"
+
+
+def init(key, cfg: CTRConfig, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d_emb = cfg.sparse.embed_dim
+    F = cfg.sparse.n_fields
+    p = {"tables": init_tables(ks[0], cfg.sparse, param_dtype)}
+
+    if cfg.interaction == "dot":          # DLRM
+        p["bot"] = init_mlp(ks[1], (cfg.n_dense,) + cfg.bot_mlp, dtype=param_dtype)
+        n_vec = F + 1
+        n_pairs = n_vec * (n_vec - 1) // 2
+        p["top"] = init_mlp(ks[2], (n_pairs + cfg.bot_mlp[-1],) + cfg.top_mlp,
+                            dtype=param_dtype)
+    elif cfg.interaction == "cross":      # DCN-v2
+        x0 = cfg.n_dense + F * d_emb
+        kc = jax.random.split(ks[3], cfg.n_cross_layers)
+        p["cross"] = [
+            {"w": normal_init(kc[i], (x0, x0), 0.01, param_dtype),
+             "b": jnp.zeros((x0,), param_dtype)}
+            for i in range(cfg.n_cross_layers)]
+        p["deep"] = init_mlp(ks[4], (x0,) + cfg.mlp_dims, dtype=param_dtype)
+        p["final"] = init_dense(ks[5], x0 + cfg.mlp_dims[-1], 1, dtype=param_dtype)
+    else:                                 # wide&deep (concat)
+        x0 = cfg.n_dense + F * d_emb
+        p["deep"] = init_mlp(ks[4], (x0,) + cfg.mlp_dims + (1,), dtype=param_dtype)
+        if cfg.wide:
+            # wide part: per-field scalar weights (a [sum V, 1] "embedding")
+            wide_spec = dataclasses.replace(cfg.sparse, embed_dim=1)
+            p["wide"] = init_tables(ks[6], wide_spec, param_dtype)
+            if cfg.n_dense:
+                p["wide_dense"] = init_dense(ks[7], cfg.n_dense, 1,
+                                             dtype=param_dtype)
+    return p
+
+
+def forward(params, cfg: CTRConfig, batch, *, impl: str = "xla"):
+    """-> logits [B]."""
+    emb = lookup(params["tables"], cfg.sparse, batch["sparse_idx"],
+                 batch.get("sparse_w"), impl=impl)          # [B, F, d]
+    B, F, d = emb.shape
+    dense_x = batch["dense"].astype(emb.dtype) if cfg.n_dense else None
+
+    if cfg.interaction == "dot":
+        bot = mlp(params["bot"], dense_x, act=jax.nn.relu,
+                  final_act=jax.nn.relu)                    # [B, d]
+        vecs = jnp.concatenate([bot[:, None, :], emb], axis=1)   # [B, F+1, d]
+        gram = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+        iu, ju = jnp.triu_indices(F + 1, k=1)
+        pairs = gram[:, iu, ju]                             # [B, n_pairs]
+        x = jnp.concatenate([bot, pairs], axis=-1)
+        return mlp(params["top"], x)[:, 0]
+
+    flat = emb.reshape(B, F * d)
+    x0 = jnp.concatenate([dense_x, flat], -1) if dense_x is not None else flat
+
+    if cfg.interaction == "cross":
+        x = x0
+        for layer in params["cross"]:
+            xw = x @ layer["w"].astype(x.dtype) + layer["b"].astype(x.dtype)
+            x = x0 * xw + x                                 # x0 ⊙ (Wx+b) + x
+        deep = mlp(params["deep"], x0, final_act=jax.nn.relu)
+        both = jnp.concatenate([x, deep], axis=-1)
+        return dense_layer(params["final"], both)[:, 0]
+
+    # wide&deep
+    logit = mlp(params["deep"], x0)[:, 0]
+    if cfg.wide:
+        wide_spec = dataclasses.replace(cfg.sparse, embed_dim=1)
+        w_emb = lookup(params["wide"], wide_spec, batch["sparse_idx"],
+                       batch.get("sparse_w"))               # [B, F, 1]
+        logit = logit + w_emb.sum(axis=(1, 2))
+        if cfg.n_dense:
+            logit = logit + dense_layer(params["wide_dense"], dense_x)[:, 0]
+    return logit
+
+
+def loss(params, cfg: CTRConfig, batch, *, impl: str = "xla"):
+    return bce_loss(forward(params, cfg, batch, impl=impl), batch["label"])
+
+
+def user_repr(params, cfg: CTRConfig, batch, *, impl: str = "xla"):
+    """Penultimate representation for retrieval scoring."""
+    emb = lookup(params["tables"], cfg.sparse, batch["sparse_idx"],
+                 batch.get("sparse_w"), impl=impl)
+    B, F, d = emb.shape
+    if cfg.interaction == "dot":
+        bot = mlp(params["bot"], batch["dense"].astype(emb.dtype),
+                  final_act=jax.nn.relu)
+        return jnp.concatenate([bot, emb.mean(1)], -1)
+    flat = emb.reshape(B, F * d)
+    if cfg.n_dense:
+        flat = jnp.concatenate([batch["dense"].astype(emb.dtype), flat], -1)
+    return flat
+
+
+def retrieval(params, cfg: CTRConfig, batch, cand, *, k: int = 100):
+    """Score one query batch against cand [N, d_repr]; top-k (MIPS).
+
+    d_repr must match user_repr output (candidates are precomputed offline,
+    matching the paper's HNSW-indexed recall evaluation)."""
+    u = user_repr(params, cfg, batch)                      # [B, D]
+    scores = u @ cand.T.astype(u.dtype)                    # [B, N]
+    return jax.lax.top_k(scores, k)

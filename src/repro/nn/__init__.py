@@ -1,0 +1,9 @@
+from .core import (ACTS, dense, embed, init_dense, init_embedding,
+                   init_layernorm, init_mlp, init_rmsnorm, layernorm, mlp,
+                   normal_init, ones_init, rmsnorm, xavier_init, zeros_init)
+from .rope import apply_rope, rope_cos_sin, rope_freqs
+from .attention import (AttnConfig, attention, blocked_sdpa, chunked_sdpa,
+                        decode_attention, init_attention, init_kv_cache, sdpa)
+from .moe import (MoEConfig, capacity_for, init_moe, moe_dense, moe_ep,
+                  moe_gather)
+from .embedding_bag import embedding_bag, embedding_bag_flat, offsets_to_fixed

@@ -1,0 +1,143 @@
+"""Substrate layers: initializers, dense, norms, embeddings.
+
+Pure-functional convention used across the framework:
+  - parameters are nested dicts of jnp arrays
+  - ``init_*`` builds parameters from a PRNG key
+  - ``apply``-style functions are pure: ``f(params, x, ...) -> y``
+
+Dry-run note: abstract parameter trees are obtained with
+``jax.eval_shape(init_fn, key)`` so no memory is allocated for 100B-scale
+configs (see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, stddev=0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def xavier_init(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[-2], shape[-1]
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, minval=-limit, maxval=limit).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+
+def init_dense(key, in_dim: int, out_dim: int, *, use_bias: bool = True,
+               stddev: float | None = None, dtype=jnp.float32):
+    kw, _ = jax.random.split(key)
+    if stddev is None:
+        w = xavier_init(kw, (in_dim, out_dim), dtype)
+    else:
+        w = normal_init(kw, (in_dim, out_dim), stddev, dtype)
+    p = {"w": w}
+    if use_bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense(params, x, *, dtype=None):
+    w = params["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    y = x @ w
+    if "b" in params:
+        b = params["b"]
+        y = y + (b.astype(dtype) if dtype is not None else b)
+    return y
+
+
+def init_mlp(key, dims: Sequence[int], *, use_bias: bool = True, dtype=jnp.float32):
+    """Plain MLP stack (used by recsys towers)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": init_dense(k, dims[i], dims[i + 1], use_bias=use_bias, dtype=dtype)
+            for i, k in enumerate(keys)}
+
+
+def mlp(params, x, *, act=jax.nn.relu, final_act=None, dtype=None):
+    n = len(params)
+    for i in range(n):
+        x = dense(params[f"l{i}"], x, dtype=dtype)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_layernorm(_key, dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_rmsnorm(_key, dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, dim: int, *, stddev: float = 0.02,
+                   dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, dim), stddev, dtype)}
+
+
+def embed(params, ids, *, dtype=None):
+    t = params["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+ACTS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+}

@@ -1,0 +1,72 @@
+"""EmbeddingBag for JAX — the recsys hot path.
+
+JAX has no native EmbeddingBag or CSR sparse; we build it from ``jnp.take``
++ ``jax.ops.segment_sum`` (this IS part of the system, per the assignment).
+
+Layouts supported:
+  * fixed multi-hot  — indices [B, F, nnz] with a validity mask (static nnz
+                       per field; ragged bags are padded to ``nnz``). This is
+                       the SPMD-friendly layout used by the big configs.
+  * flat/offsets     — torch-style (indices [N], offsets [B]) for the host
+                       pipeline; converted to fixed layout before device put.
+
+A Pallas fused gather-reduce kernel (kernels/embedding_bag.py) replaces the
+take+reduce pair on TPU; this module is the reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag(table, indices, weights=None, *, mode: str = "sum"):
+    """table: [V, d]; indices: [..., nnz] int32; weights: optional [..., nnz].
+
+    Reduces over the trailing ``nnz`` axis. Padded slots should carry
+    weight 0 (or index into a zero row). Returns [..., d].
+    """
+    emb = jnp.take(table, indices, axis=0)              # [..., nnz, d]
+    if weights is not None:
+        emb = emb * weights[..., None].astype(emb.dtype)
+    if mode == "sum":
+        return emb.sum(axis=-2)
+    if mode == "mean":
+        denom = (weights.sum(-1, keepdims=True) if weights is not None
+                 else jnp.float32(indices.shape[-1]))
+        return emb.sum(axis=-2) / jnp.maximum(denom, 1e-9)
+    if mode == "max":
+        if weights is not None:
+            emb = jnp.where(weights[..., None] > 0, emb, -jnp.inf)
+        return emb.max(axis=-2)
+    raise ValueError(mode)
+
+
+def embedding_bag_flat(table, indices, segment_ids, num_segments: int,
+                       weights=None):
+    """torch-style ragged bags: indices [N], segment_ids [N] -> [B, d].
+
+    Implemented as gather + segment_sum (scatter-add by key).
+    """
+    emb = jnp.take(table, indices, axis=0)               # [N, d]
+    if weights is not None:
+        emb = emb * weights[:, None].astype(emb.dtype)
+    return jax.ops.segment_sum(emb, segment_ids, num_segments=num_segments)
+
+
+def offsets_to_fixed(indices: np.ndarray, offsets: np.ndarray, nnz: int,
+                     pad_index: int = 0):
+    """Host-side conversion: (indices [N], offsets [B]) -> ([B, nnz], [B, nnz]).
+
+    Returns padded index matrix + float weight mask. Bags longer than ``nnz``
+    are truncated (counted by the loader's overflow metric).
+    """
+    B = len(offsets)
+    out = np.full((B, nnz), pad_index, dtype=np.int32)
+    w = np.zeros((B, nnz), dtype=np.float32)
+    ends = np.append(offsets[1:], len(indices))
+    for b in range(B):
+        seg = indices[offsets[b]:ends[b]][:nnz]
+        out[b, :len(seg)] = seg
+        w[b, :len(seg)] = 1.0
+    return out, w

@@ -1,0 +1,184 @@
+"""Mixture-of-Experts substrate.
+
+Three interchangeable implementations (``impl`` knob):
+  * ``dense``  — every expert runs on every token, gated by the top-k mask.
+                 O(E) FLOPs; only for tiny smoke/grad tests.
+  * ``gather`` — sort-based capacity dispatch on one device (the real routing
+                 algorithm; top-k -> argsort -> fixed-capacity gather ->
+                 grouped GEMM -> scatter-combine). Used for CPU validation.
+  * ``ep``     — expert parallelism: shard_map over the mesh; experts sharded
+                 on the ``model`` axis, activations replicated over it; each
+                 device runs ``gather`` restricted to its local expert slice
+                 and the outputs are psum-combined (row-parallel pattern).
+
+The routing math (softmax -> top-k -> normalized gates -> capacity drop) is
+identical across implementations, so ``gather`` is the oracle for ``ep``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .core import normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    gated: bool = True          # SwiGLU experts (w1, w3, w2) vs GELU (w1, w2)
+    norm_topk: bool = True      # renormalize top-k gate weights to sum to 1
+
+
+def init_moe(key, cfg: MoEConfig, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": normal_init(ks[0], (d, E), 0.02, param_dtype),
+        "w1": normal_init(ks[1], (E, d, f), 0.02, param_dtype),
+        "w2": normal_init(ks[2], (E, f, d), 0.02, param_dtype),
+    }
+    if cfg.gated:
+        p["w3"] = normal_init(ks[3], (E, d, f), 0.02, param_dtype)
+    return p
+
+
+def _expert_ffn(p, x_e, cfg: MoEConfig):
+    """x_e: [E, C, d] -> [E, C, d] grouped GEMMs."""
+    h1 = jnp.einsum("ecd,edf->ecf", x_e, p["w1"].astype(x_e.dtype))
+    if cfg.gated:
+        h3 = jnp.einsum("ecd,edf->ecf", x_e, p["w3"].astype(x_e.dtype))
+        h = jax.nn.silu(h1) * h3
+    else:
+        h = jax.nn.gelu(h1)
+    return jnp.einsum("ecf,efd->ecd", h, p["w2"].astype(x_e.dtype))
+
+
+def _route(p, x2d, cfg: MoEConfig):
+    """x2d: [T, d] -> (gates [T,k], experts [T,k] int32, aux_loss scalar)."""
+    logits = (x2d @ p["router"].astype(x2d.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # [T, E]
+    gate, eidx = jax.lax.top_k(probs, cfg.top_k)                  # [T, k]
+    if cfg.norm_topk:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # switch-style load-balancing loss
+    T = x2d.shape[0]
+    me = probs.mean(axis=0)                                       # [E]
+    one_hot = jax.nn.one_hot(eidx[:, 0], cfg.n_experts, dtype=jnp.float32)
+    ce = one_hot.mean(axis=0)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return gate, eidx, aux
+
+
+def moe_dense(p, x, cfg: MoEConfig):
+    """All-experts path (tiny tests only). x: [..., d]."""
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    gate, eidx, aux = _route(p, x2, cfg)
+    # full gate matrix [T, E]
+    gmat = jnp.zeros((x2.shape[0], cfg.n_experts), x2.dtype)
+    gmat = gmat.at[jnp.arange(x2.shape[0])[:, None], eidx].set(gate.astype(x2.dtype))
+    y_all = _expert_ffn(p, jnp.broadcast_to(x2, (cfg.n_experts,) + x2.shape), cfg)
+    y = jnp.einsum("te,etd->td", gmat, y_all)
+    return y.reshape(shp), aux
+
+
+def capacity_for(tokens: int, cfg: MoEConfig) -> int:
+    c = int(math.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)   # round up to 8 for TPU-friendly tiling
+
+
+def moe_gather(p, x, cfg: MoEConfig, *, expert_start: int = 0,
+               n_local: int | None = None, capacity: int | None = None):
+    """Sort-based capacity dispatch. x: [..., d] -> (y, aux).
+
+    ``expert_start``/``n_local`` restrict computation to a contiguous expert
+    slice whose weights are ``p['w*']`` (used by the EP path); routing is
+    always computed over the full expert set.
+    """
+    shp = x.shape
+    d = shp[-1]
+    x2 = x.reshape(-1, d)
+    T = x2.shape[0]
+    E_local = n_local if n_local is not None else cfg.n_experts
+    C = capacity if capacity is not None else capacity_for(T, cfg)
+
+    gate, eidx, aux = _route(p, x2, cfg)
+    k = cfg.top_k
+    flat_e = eidx.reshape(-1)                                      # [T*k]
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)                       # [T*k]
+    sorted_e = flat_e[order]
+    sorted_tok = order // k
+    sorted_g = flat_g[order]
+    # rank of each assignment within its expert
+    counts = jnp.zeros((cfg.n_experts,), jnp.int32).at[flat_e].add(1)
+    excl = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(T * k, dtype=jnp.int32) - excl[sorted_e]
+    local_e = sorted_e - expert_start
+    valid = (rank < C) & (local_e >= 0) & (local_e < E_local)
+    slot = jnp.where(valid, local_e * C + rank, E_local * C)       # OOB -> dropped
+
+    x_e = jnp.zeros((E_local * C, d), x2.dtype)
+    x_e = x_e.at[slot].set(x2[sorted_tok], mode="drop")
+    y_e = _expert_ffn(p, x_e.reshape(E_local, C, d), cfg).reshape(E_local * C, d)
+
+    slot_read = jnp.minimum(slot, E_local * C - 1)
+    contrib = jnp.take(y_e, slot_read, axis=0)
+    contrib = contrib * (sorted_g * valid)[:, None].astype(contrib.dtype)
+    y = jnp.zeros((T, d), x2.dtype).at[sorted_tok].add(contrib)
+    return y.reshape(shp), aux
+
+
+def moe_ep(p, x, cfg: MoEConfig, mesh, *, data_axes=("pod", "data"),
+           model_axis="model"):
+    """Expert-parallel MoE via shard_map.
+
+    x: [B, S, d] sharded batch->data_axes, replicated over model_axis.
+    Expert weights sharded over model_axis on the expert dim. Output psum'd
+    over model_axis (replicated), aux loss is identical on every shard.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data_axes = tuple(a for a in data_axes if a in axis_sizes)
+    n_shards = axis_sizes[model_axis]
+    assert cfg.n_experts % n_shards == 0, "experts must divide model axis"
+    E_local = cfg.n_experts // n_shards
+    B, S, d = x.shape
+    # small-batch decode: drop data axes the batch can't shard over
+    # (x stays replicated there; routing is redundantly recomputed)
+    while data_axes and B % math.prod(axis_sizes[a] for a in data_axes):
+        data_axes = data_axes[1:]
+    T_local = (B // math.prod([axis_sizes[a] for a in data_axes], start=1)) * S
+    C = capacity_for(T_local, cfg)
+
+    pspec = {
+        "router": P(),
+        "w1": P(model_axis, None, None),
+        "w2": P(model_axis, None, None),
+    }
+    if cfg.gated:
+        pspec["w3"] = P(model_axis, None, None)
+    xspec = P(data_axes, None, None)
+
+    def local_fn(pl, xl):
+        idx = jax.lax.axis_index(model_axis)
+        y, aux = moe_gather(pl, xl, cfg, expert_start=idx * E_local,
+                            n_local=E_local, capacity=C)
+        y = jax.lax.psum(y, model_axis)
+        if data_axes:
+            aux = jax.lax.pmean(aux, data_axes)
+        return y, aux
+
+    y, aux = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(pspec, xspec),
+        out_specs=(xspec, P()),
+    )(p, x)
+    return y, aux

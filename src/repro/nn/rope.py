@@ -1,0 +1,47 @@
+"""Rotary position embeddings: standard (NeoX), partial-fraction (ChatGLM 2D),
+and the interleaved NoPE layers used by Llama-4-style iRoPE.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, *, theta: float = 10000.0):
+    """Inverse frequencies for a (sub-)dimension ``dim`` (must be even)."""
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def rope_cos_sin(positions, dim: int, *, theta: float = 10000.0):
+    """cos/sin tables for integer ``positions`` [...,] -> [..., dim/2]."""
+    inv = rope_freqs(dim, theta=theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., dim/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, *, fraction: float = 1.0):
+    """Rotate the leading ``fraction`` of the head dim of ``x``.
+
+    x: [..., S, H, D] (cos/sin broadcast over H: [S, d_rot/2] or [..., S, d_rot/2]).
+    fraction=0.5 reproduces ChatGLM's partial rotary; fraction=1.0 is standard.
+    """
+    d = x.shape[-1]
+    d_rot = int(d * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    x_rot, x_pass = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = x_rot[..., : d_rot // 2], x_rot[..., d_rot // 2:]
+    # broadcast cos/sin over the head axis: [..., S, 1, d_rot/2]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    out = jnp.concatenate([r1, r2], axis=-1)
+    if x_pass.shape[-1]:
+        out = jnp.concatenate([out, x_pass], axis=-1)
+    return out
+
+
+def positions_for_decode(cache_len, batch: int):
+    """Positions for a single-token decode step: [B, 1] all equal cache_len."""
+    return jnp.full((batch, 1), cache_len, dtype=jnp.int32)

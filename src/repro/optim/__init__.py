@@ -1,0 +1,3 @@
+from .adam import (AdamConfig, adam_init, adam_update, clip_by_global_norm,
+                   make_train_step)
+from .schedules import constant, cosine_decay, linear_warmup_cosine

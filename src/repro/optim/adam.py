@@ -1,0 +1,189 @@
+"""AdamW with parameter-group learning rates, global-norm clipping,
+gradient accumulation, and an optional int8-compressed cross-pod gradient
+reduction (error feedback lives in the optimizer state).
+
+Paper training recipe (§A.3): Adam, lr 8e-6 for the PLM group and 1e-4 for
+the rest — expressed here as path-prefix LR groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0                  # 0 disables
+    # path-prefix -> lr multiplier (e.g. {"plm": 8e-6/1e-4} for the PLM group)
+    group_lr_scales: tuple = ()             # tuple of (prefix, scale)
+    accum_steps: int = 1                    # gradient accumulation microsteps
+    dp_compression: Optional[str] = None    # None | "int8" (cross-pod)
+
+
+def adam_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.zeros_like, zeros),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def _lr_scale_tree(params, cfg: AdamConfig):
+    def scale_for(path, _):
+        s = _path_str(path)
+        for prefix, scale in cfg.group_lr_scales:
+            if s.startswith(prefix):
+                return jnp.float32(scale)
+        return jnp.float32(1.0)
+    return jax.tree_util.tree_map_with_path(scale_for, params)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adam_update(params, grads, state, cfg: AdamConfig,
+                lr_schedule: Callable | None = None):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr_t = lr_schedule(count) if lr_schedule else jnp.float32(cfg.lr)
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = jnp.float32(0.0)
+    scales = _lr_scale_tree(params, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v, s):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        mh = m / bc1
+        vh = v / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr_t * s * step
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_s = jax.tree.leaves(scales)
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v, flat_s)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_state = {"m": jax.tree.unflatten(tdef, [o[1] for o in out]),
+                 "v": jax.tree.unflatten(tdef, [o[2] for o in out]),
+                 "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr_t}
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback (cross-pod / DCN axis)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x):
+    scale = jnp.maximum(jnp.abs(x).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis: str, residual):
+    """Quantize (with error feedback), psum int8 over ``axis``, dequantize.
+
+    Must run inside shard_map with ``axis`` manual. residual: same pytree
+    (error feedback memory). Returns (reduced grads, new residual).
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(gf)
+        err = gf - dequantize_int8(q, scale)
+        qs = jax.lax.psum(q.astype(jnp.int32), axis)
+        ss = jax.lax.pmax(scale, axis)        # conservative shared scale
+        return (qs.astype(jnp.float32) * ss / n).astype(g.dtype), err
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (jax.tree.unflatten(tdef, [o[0] for o in out]),
+            jax.tree.unflatten(tdef, [o[1] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# train-step factory
+# ---------------------------------------------------------------------------
+
+def make_train_step(loss_fn, cfg: AdamConfig, lr_schedule=None,
+                    *, has_aux_state: bool = False):
+    """Build ``step(params, opt_state, batch, *extra) -> (params', opt', metrics)``.
+
+    loss_fn(params, batch, *extra) -> loss | (loss, metrics).
+    ``accum_steps > 1``: batch's leading axis is split into microbatches and
+    grads are accumulated in a lax.scan (single deferred gradient reduction —
+    the standard overlap/memory trade).
+    """
+    def value_and_metrics(params, batch, *extra):
+        out = loss_fn(params, batch, *extra)
+        if isinstance(out, tuple):
+            return out
+        return out, {}
+
+    grad_fn = jax.value_and_grad(value_and_metrics, has_aux=True)
+
+    def step(params, opt_state, batch, *extra):
+        if cfg.accum_steps > 1:
+            def micro(carry, mb):
+                acc, loss_acc = carry
+                (loss, m), g = grad_fn(params, mb, *extra)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), m
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((cfg.accum_steps,
+                                     x.shape[0] // cfg.accum_steps)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (grads, loss_sum), ms = jax.lax.scan(micro, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / cfg.accum_steps, grads)
+            loss = loss_sum / cfg.accum_steps
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch, *extra)
+        new_params, new_opt, om = adam_update(params, grads, opt_state, cfg,
+                                              lr_schedule)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return step

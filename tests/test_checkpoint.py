@@ -1,0 +1,89 @@
+"""Checkpoint/restart fault-tolerance contracts."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+
+
+def tree(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(key, (4, 8)),
+            "b": {"w": jax.random.normal(key, (3,)),
+                  "count": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    ckpt.save(str(tmp_path), 5, t)
+    step, restored = ckpt.restore(str(tmp_path), t)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_prunes(tmp_path):
+    t = tree()
+    for s in range(6):
+        ckpt.save(str(tmp_path), s, t, keep=2)
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+    assert ckpt.latest_step(str(tmp_path)) == 5
+
+
+def test_restore_latest_and_explicit(tmp_path):
+    t0, t1 = tree(0), tree(1)
+    ckpt.save(str(tmp_path), 1, t0)
+    ckpt.save(str(tmp_path), 2, t1)
+    _, r = ckpt.restore(str(tmp_path), t0)
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(t1["a"]))
+    _, r0 = ckpt.restore(str(tmp_path), t0, step=1)
+    np.testing.assert_array_equal(np.asarray(r0["a"]), np.asarray(t0["a"]))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, tree())
+    bad = {"a": jnp.zeros((2, 2)), "b": {"w": jnp.zeros((3,)),
+                                         "count": jnp.int32(0)}}
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+def test_interrupted_write_never_corrupts_latest(tmp_path):
+    """A writer killed mid-write leaves only a .tmp dir; LATEST still points
+    at the previous good checkpoint."""
+    t = tree()
+    ckpt.save(str(tmp_path), 1, t)
+    # simulate a dead writer's leftovers
+    os.makedirs(tmp_path / ".tmp_dead")
+    with open(tmp_path / ".tmp_dead" / "arrays.npz", "w") as f:
+        f.write("garbage")
+    step, restored = ckpt.restore(str(tmp_path), t)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+
+
+def test_async_checkpointer(tmp_path):
+    t = tree()
+    w = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3):
+        w.save(s, jax.tree.map(lambda x: x, t))
+    w.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_restore_sharded_replaces_devices(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh_for
+    t = tree()
+    ckpt.save(str(tmp_path), 1, t)
+    mesh = make_mesh_for(1, model=1)
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    step, placed = ckpt.restore_sharded(str(tmp_path), t, shardings)
+    assert step == 1
+    assert all(x.sharding == NamedSharding(mesh, P())
+               for x in jax.tree.leaves(placed))

@@ -1,0 +1,164 @@
+"""Data-pipeline behaviour: OBoW refinement, Zipf click log, dynamic
+batching invariants, graph sampling."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import data
+from repro.data import graph as gdata
+from repro.data.refine import STOPWORDS, bm25_scores, obow
+from repro.data.tokenizer import encode, hash_token
+
+
+def test_tokenizer_deterministic_and_bounded():
+    t1 = encode("Hello World hello", vocab=100, max_len=8)
+    t2 = encode("Hello World hello", vocab=100, max_len=8)
+    assert t1 == t2
+    assert len(t1) == 8 and all(0 <= x < 100 for x in t1)
+    assert hash_token("hello", 100) == t1[1]   # after CLS
+    assert t1[1] == t1[3]                      # case-insensitive repeat
+
+
+def test_obow_order_and_counts():
+    pairs = obow("the cat sat and the cat ran cat")
+    assert pairs == [("cat", 3), ("sat", 1), ("ran", 1)]
+    assert all(w not in STOPWORDS for w, _ in pairs)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30))
+def test_refine_keeps_at_most_top_k(k):
+    texts = [f"w{i} common word filler text w{i + 1}" for i in range(30)]
+    stats = data.build_corpus_stats(texts)
+    pairs = data.refine(" ".join(f"u{i}" for i in range(50)), stats, top_k=k)
+    assert len(pairs) <= k
+
+
+def test_refined_tokens_carry_frequency_channel():
+    stats = data.build_corpus_stats(["alpha beta beta gamma"] * 3)
+    toks, freq = data.refined_tokens("alpha beta beta beta gamma", stats,
+                                     vocab=500, seg_len=8)
+    assert len(toks) == len(freq) == 8
+    assert freq[0] == 1                       # CLS
+    assert 3 in freq                          # beta appears 3x
+    assert all(f == 0 for t, f in zip(toks, freq) if t == 0)
+
+
+def test_click_log_long_tail():
+    rng = np.random.default_rng(0)
+    corpus = data.make_corpus(rng, n_news=1000, zipf_a=1.6)
+    log = data.make_click_log(rng, corpus, n_users=300)
+    share = data.click_share_topk(log, corpus, [0.01, 0.10, 0.30])
+    assert share[0.01] > 0.10          # strongly long-tailed
+    assert share[0.10] > share[0.01]
+    assert share[0.30] > share[0.10]
+
+
+@pytest.fixture(scope="module")
+def loader_setup():
+    rng = np.random.default_rng(1)
+    corpus = data.make_corpus(rng, n_news=200)
+    log = data.make_click_log(rng, corpus, n_users=60)
+    stats = data.build_corpus_stats(
+        [corpus.text(i) for i in range(corpus.n_news)])
+    cfg = data.LoaderConfig(vocab=2000, seg_len=16, buckets=(8, 12, 16),
+                            token_budget=2500, b_cap=8, m_cap=64,
+                            hist_len=16)
+    store = data.NewsStore(corpus, stats, cfg)
+    return corpus, log, stats, cfg, store
+
+
+def test_dynamic_batching_invariants(loader_setup):
+    corpus, log, stats, cfg, store = loader_setup
+    b = data.DynamicBatcher(log, store, cfg, n_threads=2).start()
+    seen = 0
+    try:
+        for _ in range(6):
+            batch = b.get(timeout=5.0)
+            if batch is None:
+                break
+            seen += 1
+            st_ = batch.pop("_stats")
+            assert st_["seg_len"] in cfg.buckets
+            assert batch["news_tokens"].shape == (cfg.m_cap, 3,
+                                                  st_["seg_len"])
+            # inverse map stays within the merged set and hits real rows
+            inv = batch["hist_inv"]
+            assert inv.max() < cfg.m_cap
+            ids = batch["news_ids"]
+            masked = inv[batch["hist_mask"]]
+            assert (ids[masked[masked > 0]] > 0).all()
+            # news longer than the bucket never land in it
+            lens = (batch["news_tokens"] != 0).sum(-1).max(-1)
+            assert lens.max() <= st_["seg_len"]
+    finally:
+        b.stop()
+    assert seen >= 2
+
+
+def test_centralized_beats_conventional_data_efficiency(loader_setup):
+    """Figure 8: dedup + bucketed padding must raise Eq.-1 data efficiency
+    over the padded per-instance layout."""
+    corpus, log, stats, cfg, store = loader_setup
+    insts = [h for h in log.histories if len(h) >= 2][:8]
+    conv = data.build_conventional_batch(insts, store, cfg)
+    seg = int(store.lengths[np.concatenate(insts)].max())
+    bucket = next(b for b in cfg.buckets if b >= min(seg, cfg.buckets[-1]))
+    cen = data.build_centralized_batch(insts, store, cfg, bucket)
+    assert cen["_stats"]["data_efficiency"] \
+        > conv["_stats"]["data_efficiency"]
+
+
+def test_build_triplets_validity():
+    rng = np.random.default_rng(2)
+    src, dst = gdata.random_graph(rng, 20, 60)
+    kj, ji, mask = gdata.build_triplets(src, dst, t_cap=512)
+    # every valid triplet: dst[kj] == src[ji] and src[kj] != dst[ji]
+    v = mask
+    assert (dst[kj[v]] == src[ji[v]]).all()
+    assert (src[kj[v]] != dst[ji[v]]).all()
+
+
+def test_triplet_cap_subsamples():
+    rng = np.random.default_rng(3)
+    src, dst = gdata.random_graph(rng, 10, 80)
+    kj, ji, mask = gdata.build_triplets(src, dst, t_cap=16, rng=rng)
+    assert mask.sum() == 16
+
+
+def test_fanout_sampler_bounds():
+    rng = np.random.default_rng(4)
+    src, dst = gdata.random_graph(rng, 200, 2000)
+    g = gdata.CSRGraph(200, src, dst)
+    seeds = np.arange(8)
+    nodes, s, d = gdata.fanout_sample(g, seeds, (5, 3), rng)
+    assert len(nodes) <= 8 + 8 * 5 + 8 * 5 * 3
+    assert (d < len(nodes)).all() and (s < len(nodes)).all()
+    # every sampled edge's destination was in an earlier frontier
+    assert set(d.tolist()) <= set(range(len(nodes)))
+
+
+def test_padded_subgraph_static_shapes():
+    rng = np.random.default_rng(5)
+    src, dst = gdata.random_graph(rng, 100, 800)
+    g = gdata.CSRGraph(100, src, dst)
+    feats = rng.normal(size=(100, 12)).astype(np.float32)
+    labels = rng.integers(0, 5, 100)
+    b = gdata.padded_subgraph_batch(g, feats, labels, np.arange(4), (4, 2),
+                                    n_cap=64, e_cap=128, t_cap=256, rng=rng)
+    assert b["feat"].shape == (64, 12)
+    assert b["edge_src"].shape == (128,)
+    assert b["trip_kj"].shape == (256,)
+    assert int(b["label_mask"].sum()) == 4
+
+
+def test_recsys_synth_learnable_signal():
+    from repro.data.recsys_synth import ctr_batch
+    rng = np.random.default_rng(6)
+    b = ctr_batch(rng, batch=4096, n_dense=4, vocab_sizes=(50, 60, 70),
+                  nnz=1)
+    # the synthetic click rule must correlate with the generating feature
+    d0 = np.asarray(b["dense"][:, 0])
+    y = np.asarray(b["label"])
+    corr = np.corrcoef(d0, y)[0, 1]
+    assert corr > 0.15

@@ -1,0 +1,109 @@
+"""Distributed control-plane behaviour: straggler rebalancing, work
+stealing, elastic meshes, gradient compression, sharding rules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import (StepTimeMonitor, WorkStealingQueue,
+                               plan_elastic_mesh)
+from repro.distributed import sharding as shx
+from repro.optim.adam import dequantize_int8, quantize_int8
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=16),
+       st.integers(1, 8))
+def test_rebalance_preserves_global_batch(times, mb):
+    mon = StepTimeMonitor(len(times))
+    for i, t in enumerate(times):
+        mon.record(i, t)
+    alloc = mon.rebalance(mb)
+    assert sum(alloc) == mb * len(times)
+    assert min(alloc) >= 1 if mb >= 1 else True
+
+
+def test_straggler_detection():
+    mon = StepTimeMonitor(4)
+    for host, t in enumerate([1.0, 1.0, 1.0, 3.0]):
+        for _ in range(5):
+            mon.record(host, t)
+    assert mon.stragglers() == [3]
+    alloc = mon.rebalance(4)
+    assert alloc[3] < 4 and sum(alloc) == 16
+
+
+def test_work_stealing():
+    q = WorkStealingQueue(2)
+    for i in range(6):
+        q.put(0, i)                 # everything lands on shard 0
+    got = [q.get(1, timeout=0.1) for _ in range(6)]
+    assert sorted(got) == list(range(6))
+    assert q.steals == 6
+    assert q.get(1, timeout=0.01) is None
+
+
+def test_plan_elastic_mesh():
+    assert plan_elastic_mesh(512, model=16) == (32, 16)
+    assert plan_elastic_mesh(496, model=16) == (31, 16)   # lost one host
+    assert plan_elastic_mesh(8, model=16) is None
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 100))
+def test_int8_quantization_error_bound(seed):
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (64,)))
+    q, scale = quantize_int8(jnp.asarray(x))
+    err = np.abs(np.asarray(dequantize_int8(q, scale)) - x)
+    assert err.max() <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_converges():
+    """With error feedback, the accumulated compressed sum tracks the true
+    sum (bias-free in the limit) — the property that makes int8 DP-grad
+    compression safe."""
+    rng = np.random.default_rng(0)
+    g = rng.normal(size=(128,)).astype(np.float32) * 0.01
+    residual = np.zeros_like(g)
+    acc_c, acc_t = np.zeros_like(g), np.zeros_like(g)
+    for _ in range(200):
+        q, s = quantize_int8(jnp.asarray(g + residual))
+        deq = np.asarray(dequantize_int8(q, s))
+        residual = (g + residual) - deq
+        acc_c += deq
+        acc_t += g
+    rel = np.abs(acc_c - acc_t).max() / np.abs(acc_t).max()
+    assert rel < 0.01
+
+
+def test_lm_rules_cover_all_lm_params():
+    from repro.configs.lm_family import QWEN3_14B, reduced_lm
+    from repro.models import lm
+    cfg = reduced_lm(QWEN3_14B)
+    pa = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    specs = shx.spec_tree(pa, shx.lm_rules(fsdp=True))
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    # every 2D+ weight that is not a norm must be sharded somewhere
+    for path, spec in flat:
+        s = "/".join(str(p.key) for p in path if hasattr(p, "key"))
+        leaf = jax.tree_util.tree_flatten_with_path(pa)[0]
+    qspec = specs["layers"]["attn"]["q"]["w"]
+    assert "model" in str(qspec)
+    assert all(a is None for a in specs["layers"]["ln1"]["scale"])
+
+
+def test_moe_rules_shard_experts():
+    from repro.configs.lm_family import DBRX_132B, reduced_lm
+    from repro.models import lm
+    cfg = reduced_lm(DBRX_132B)
+    pa = jax.eval_shape(lambda: lm.init(jax.random.PRNGKey(0), cfg))
+    specs = shx.spec_tree(pa, shx.lm_rules(fsdp=True))
+    assert str(specs["layers"]["moe"]["w1"]).startswith(
+        "PartitionSpec(None, 'model'")  # leading L dim padded with None
+
+
+def test_activation_constraint_noop_without_registration():
+    x = jnp.ones((4, 4))
+    shx.set_activation_specs({})
+    assert shx.constrain(x, "residual") is x

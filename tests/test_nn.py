@@ -1,0 +1,192 @@
+"""Substrate-layer behaviour: attention variants, RoPE, MoE, EmbeddingBag."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import nn
+
+
+def test_gqa_equals_repeated_kv_mha():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, Hq, Hkv, D = 2, 16, 8, 2, 16
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    out = nn.sdpa(q, k, v, causal=True)
+    krep = jnp.repeat(k, Hq // Hkv, axis=2)
+    vrep = jnp.repeat(v, Hq // Hkv, axis=2)
+    exp = nn.sdpa(q, krep, vrep, causal=True)
+    np.testing.assert_allclose(np.array(out), np.array(exp), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_chunked_attention_blocks_cross_chunk_information():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, S, H, D, C = 1, 32, 2, 8, 8
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    out = nn.chunked_sdpa(q, k, v, chunk=C)
+    # perturb chunk 0's keys: outputs in later chunks must not change
+    k2 = k.at[:, :C].add(10.0)
+    v2 = v.at[:, :C].add(-3.0)
+    out2 = nn.chunked_sdpa(q, k2, v2, chunk=C)
+    np.testing.assert_allclose(np.array(out[:, C:]), np.array(out2[:, C:]))
+    assert not np.allclose(np.array(out[:, :C]), np.array(out2[:, :C]))
+
+
+def test_chunked_equals_full_within_first_chunk():
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    B, S, H, D, C = 1, 32, 2, 8, 8
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    full = nn.sdpa(q, k, v, causal=True)
+    chunked = nn.chunked_sdpa(q, k, v, chunk=C)
+    np.testing.assert_allclose(np.array(full[:, :C]),
+                               np.array(chunked[:, :C]), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    pos = jnp.arange(16)[None]
+    cos, sin = nn.rope_cos_sin(pos, 32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 4, 32))
+    r = nn.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.array(r), axis=-1),
+                               np.linalg.norm(np.array(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(q,m), R(k,n)> depends only on m - n
+    q = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(5), (1, 1, 1, 32))
+    def dot_at(m, n):
+        cm, sm = nn.rope_cos_sin(jnp.array([[m]]), 32)
+        cn, sn = nn.rope_cos_sin(jnp.array([[n]]), 32)
+        return float(jnp.sum(nn.apply_rope(q, cm, sm)
+                             * nn.apply_rope(k, cn, sn)))
+    assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
+
+
+def test_partial_rope_leaves_tail_untouched():
+    pos = jnp.arange(8)[None]
+    d_rot = 8   # fraction 0.5 of 16
+    cos, sin = nn.rope_cos_sin(pos, d_rot)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 8, 2, 16))
+    r = nn.apply_rope(x, cos, sin, fraction=0.5)
+    np.testing.assert_allclose(np.array(r[..., 8:]), np.array(x[..., 8:]))
+    assert not np.allclose(np.array(r[..., :8]), np.array(x[..., :8]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(1, 4), st.sampled_from([2, 4, 8]))
+def test_moe_dense_equals_gather_with_ample_capacity(seed, top_k, n_experts):
+    top_k = min(top_k, n_experts)
+    cfg = nn.MoEConfig(d_model=16, d_ff=32, n_experts=n_experts, top_k=top_k,
+                       capacity_factor=16.0)
+    key = jax.random.PRNGKey(seed)
+    p = nn.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 6, 16))
+    yd, _ = nn.moe_dense(p, x, cfg)
+    yg, _ = nn.moe_gather(p, x, cfg)
+    np.testing.assert_allclose(np.array(yd), np.array(yg), rtol=3e-4,
+                               atol=3e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = nn.MoEConfig(d_model=8, d_ff=16, n_experts=2, top_k=1,
+                       capacity_factor=0.25)
+    key = jax.random.PRNGKey(0)
+    p = nn.init_moe(key, cfg)
+    x = jax.random.normal(key, (1, 32, 8))
+    y, _ = nn.moe_gather(p, x, cfg)
+    # capacity 8 per expert but 32 assignments -> some outputs must be 0
+    norms = np.linalg.norm(np.array(y[0]), axis=-1)
+    assert (norms == 0.0).sum() >= 8
+
+
+def test_moe_grad_flows():
+    cfg = nn.MoEConfig(d_model=8, d_ff=16, n_experts=4, top_k=2)
+    key = jax.random.PRNGKey(0)
+    p = nn.init_moe(key, cfg)
+    x = jax.random.normal(key, (2, 8, 8))
+    g = jax.grad(lambda p: nn.moe_gather(p, x, cfg)[0].sum())(p)
+    assert all(np.isfinite(np.array(t)).all() for t in jax.tree.leaves(g))
+    assert float(jnp.abs(g["w2"]).sum()) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4))
+def test_embedding_bag_flat_equals_fixed(F, nnz):
+    key = jax.random.PRNGKey(F * 10 + nnz)
+    t = jax.random.normal(key, (50, 8))
+    idx = jax.random.randint(key, (3, F, nnz), 0, 50)
+    w = jax.random.uniform(key, (3, F, nnz))
+    fixed = nn.embedding_bag(t, idx, w)
+    flat = nn.embedding_bag_flat(
+        t, idx.reshape(-1), jnp.repeat(jnp.arange(3 * F), nnz), 3 * F,
+        weights=w.reshape(-1))
+    np.testing.assert_allclose(np.array(fixed.reshape(3 * F, 8)),
+                               np.array(flat), rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_modes():
+    t = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    idx = jnp.array([[[0, 1, 1]]])
+    w = jnp.array([[[1.0, 1.0, 0.0]]])
+    s = nn.embedding_bag(t, idx, w, mode="sum")
+    np.testing.assert_allclose(np.array(s[0, 0]), np.array(t[0] + t[1]))
+    m = nn.embedding_bag(t, idx, w, mode="mean")
+    np.testing.assert_allclose(np.array(m[0, 0]),
+                               np.array((t[0] + t[1]) / 2))
+
+
+def test_decode_attention_matches_full_attention():
+    cfg = nn.AttnConfig(d_model=32, n_heads=4, n_kv=2, head_dim=8,
+                        qkv_bias=True)
+    key = jax.random.PRNGKey(7)
+    p = nn.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 12, 32))
+    full = nn.attention(p, x, cfg)
+    cache = nn.init_kv_cache(2, 12, cfg, jnp.float32)
+    outs = []
+    for i in range(12):
+        o, cache = nn.decode_attention(p, x[:, i:i + 1], cache,
+                                       jnp.int32(i), cfg)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.array(full), np.array(dec), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_quantized_kv_cache_decode_close_to_fp():
+    """int8 KV cache (§Perf/H4): decode outputs within quantization noise
+    of the fp cache across a multi-step decode."""
+    cfg = nn.AttnConfig(d_model=32, n_heads=4, n_kv=2, head_dim=8,
+                        qkv_bias=True)
+    key = jax.random.PRNGKey(11)
+    p = nn.init_attention(key, cfg)
+    x = jax.random.normal(key, (2, 10, 32))
+    from repro.nn.attention import init_kv_cache_q8
+    cache_fp = nn.init_kv_cache(2, 10, cfg, jnp.float32)
+    cache_q8 = init_kv_cache_q8(2, 10, cfg)
+    for i in range(10):
+        of, cache_fp = nn.decode_attention(p, x[:, i:i + 1], cache_fp,
+                                           jnp.int32(i), cfg)
+        oq, cache_q8 = nn.decode_attention(p, x[:, i:i + 1], cache_q8,
+                                           jnp.int32(i), cfg)
+    err = float(jnp.abs(of - oq).max())
+    scale = float(jnp.abs(of).max())
+    assert err < 0.05 * scale + 0.02, (err, scale)
+
+
+def test_quantized_cache_halves_bytes():
+    from repro.nn.attention import init_kv_cache_q8
+    # head_dim 64+ as in the real configs (scale overhead = 4/hd bytes/elt)
+    cfg = nn.AttnConfig(d_model=512, n_heads=8, n_kv=8, head_dim=64)
+    fp = nn.init_kv_cache(2, 64, cfg, jnp.bfloat16)
+    q8 = init_kv_cache_q8(2, 64, cfg)
+    bytes_fp = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(fp))
+    bytes_q8 = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(q8))
+    assert bytes_q8 < 0.6 * bytes_fp

@@ -1,0 +1,110 @@
+"""End-to-end system behaviour: per-arch smoke tests (reduced configs, one
+real train/serve step, shapes + finiteness), training loop with
+checkpoint/restart fault injection, serving loop, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+
+
+@pytest.mark.parametrize("arch", configs.ASSIGNED + ["speedyfeed"])
+def test_arch_smoke(arch):
+    """Every assigned architecture instantiates a reduced config and runs a
+    forward/train step on CPU with finite outputs (assignment requirement)."""
+    metrics = configs.get_arch(arch).smoke()
+    assert metrics    # smoke() raises on shape/NaN violations
+
+
+def test_registry_has_all_assigned_cells():
+    for name in configs.ASSIGNED:
+        arch = configs.get_arch(name)
+        assert len(arch.cells) == 4 if arch.family != "news" else True
+        for cell in arch.cells.values():
+            assert cell.kind in ("train", "prefill", "decode", "serve",
+                                 "retrieval")
+
+
+def test_long500k_skips_are_documented():
+    skipped = []
+    for name in ("qwen3-14b", "chatglm3-6b", "qwen2-72b", "dbrx-132b"):
+        cell = configs.get_arch(name).cells["long_500k"]
+        assert cell.skip and "sub-quadratic" in cell.skip
+        skipped.append(name)
+    assert configs.get_arch("llama4-scout-17b-a16e").cells[
+        "long_500k"].skip is None
+    assert len(skipped) == 4
+
+
+def test_train_loop_with_restart(tmp_path):
+    """Kill the trainer mid-run; a fresh boot must resume from the latest
+    checkpoint and finish the remaining steps."""
+    from repro.launch.train import train_speedyfeed
+    ckpt_dir = str(tmp_path / "ckpt")
+    with pytest.raises(RuntimeError, match="injected failure"):
+        train_speedyfeed(steps=30, ckpt_dir=ckpt_dir, ckpt_every=10,
+                         fail_at=17, log_every=0, async_ckpt=False)
+    res = train_speedyfeed(steps=30, ckpt_dir=ckpt_dir, ckpt_every=10,
+                           log_every=0, async_ckpt=False)
+    assert res.resumed_from == 10      # last checkpoint before the crash
+    assert res.steps_done == 30
+    assert np.isfinite(res.losses).all()
+
+
+def test_training_learns():
+    from repro.launch.train import train_speedyfeed
+    res = train_speedyfeed(steps=40, log_every=0)
+    assert np.isfinite(res.losses).all()
+    # well above chance (chance = 1/(1+n_neg) = 0.2); the loss itself is
+    # noisy across heterogeneous dynamic batches, accuracy is the signal
+    assert res.metrics["ar_acc"] > 0.3
+
+
+def test_serving_loop():
+    from repro.launch import serve
+    stats = serve.main(["--requests", "24", "--batch", "8", "--k", "5"])
+    assert stats.n_requests == 24
+    assert stats.recall_ok
+    assert stats.n_batches >= 3
+
+
+def test_dryrun_machinery_tiny_mesh():
+    """The dry-run path (abstract args -> lower -> compile -> roofline)
+    works end-to-end on the 1-device mesh (full 512-dev run is exercised by
+    launch/dryrun.py in a separate process)."""
+    from repro.launch import roofline as rl
+    from repro.launch.mesh import make_mesh_for
+    arch = configs.get_arch("dcn-v2")
+    cell = arch.cells["serve_p99"]
+    mesh = make_mesh_for(1, model=1)
+    fn = cell.make_fn(mesh)
+    args = cell.abstract_args(mesh)
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(fn).lower(*args).compile()
+    r = rl.from_compiled(cell, compiled, "1x1", 1)
+    assert r.flops_per_chip > 0
+    assert r.bottleneck in ("compute", "memory", "collective")
+
+
+def test_news_baselines_train_step():
+    from repro import optim
+    from repro.models import news as news_mod
+    key = jax.random.PRNGKey(0)
+    for name in ("npa", "naml", "lstur", "nrms"):
+        cfg = news_mod.NewsBaselineConfig(name=name, vocab=500, n_users=50,
+                                          d_word=16, d_news=16, n_heads=2)
+        params = news_mod.init(key, cfg)
+        batch = {"hist_tokens": jax.random.randint(key, (4, 6, 3, 8), 0, 500),
+                 "hist_mask": jnp.ones((4, 6), bool),
+                 "cand_tokens": jax.random.randint(key, (4, 5, 3, 8), 0, 500),
+                 "label": jnp.array([0, 1, 2, 3]),
+                 "cand_mask": jnp.ones((4, 5), bool),
+                 "user_id": jnp.arange(4)}
+        step = optim.make_train_step(
+            lambda p, b, cfg=cfg: news_mod.loss(p, cfg, b),
+            optim.AdamConfig(lr=1e-3))
+        params, _, m = jax.jit(step)(params, optim.adam_init(params), batch)
+        assert np.isfinite(float(m["loss"]))
