@@ -1,0 +1,101 @@
+"""Retrieval benchmark: QPS + recall@k for exact vs IVF-Flat vs IVF-PQ.
+
+Sweeps corpus sizes, measures batched query throughput and recall@10
+against the exact-MIPS oracle for each index kind (IVF-PQ runs the full
+two-stage pipeline: ANN recall@k' + exact re-rank — the served config).
+
+CPU-scale note: on this container the Pallas LUT kernel runs in interpret
+mode and the ragged IVF gather is host python, so *absolute* QPS favors
+the one-einsum exact scan; the numbers to read are recall trade-offs and
+the corpus-size scaling trend, not exact-vs-ANN wall-clock.
+
+  PYTHONPATH=src python benchmarks/retrieval.py [--sizes 2000 8000]
+
+Writes BENCH_retrieval.json next to this file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import serving
+
+
+def make_vectors(n, d=64, rank=16, seed=0):
+    rng = np.random.default_rng(seed)
+    basis = rng.normal(size=(rank, d))
+    x = rng.normal(size=(n, rank)) @ basis + 0.1 * rng.normal(size=(n, d))
+    return x.astype(np.float32)
+
+
+def recall_at_k(ids, ref_ids):
+    k = ref_ids.shape[1]
+    return float(np.mean([len(set(ids[b]) & set(ref_ids[b])) / k
+                          for b in range(ids.shape[0])]))
+
+
+def bench_index(kind, x, q, ref_ids, *, k=10, iters=5):
+    d = x.shape[1]
+    ids = np.arange(1, x.shape[0] + 1)
+    nlist = max(8, min(64, x.shape[0] // 64))
+    idx = serving.make_index(kind, d,
+                             ivf=serving.IVFConfig(nlist=nlist, nprobe=16),
+                             pq=serving.PQConfig(n_subvec=16, n_codes=64))
+    t0 = time.perf_counter()
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    idx.add(ids, x)
+    build_s = time.perf_counter() - t0
+
+    if kind == "ivf-pq":      # served config: two-stage with exact re-rank
+        store = np.zeros((x.shape[0] + 1, d), np.float32)
+        store[ids] = x
+        svc = serving.RetrievalService(idx, store, k=k, k_prime=10 * k)
+        run = lambda: svc.query(q, k)
+    else:
+        run = lambda: idx.search(q, k)
+
+    run()                     # warm the jitted scorers
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _, got = run()
+        times.append(time.perf_counter() - t0)
+    qps = q.shape[0] / float(np.median(times))
+    return {"kind": kind, "build_s": round(build_s, 3),
+            "qps": round(qps, 1), "recall_at_10": recall_at_k(got, ref_ids)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[2000, 8000])
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    args = ap.parse_args()
+
+    results = []
+    for n in args.sizes:
+        x = make_vectors(n)
+        q = make_vectors(args.batch, seed=7)
+        oracle = serving.FlatIndex(x.shape[1])
+        oracle.add(np.arange(1, n + 1), x)
+        _, ref_ids = oracle.search(q, args.k)
+        for kind in ("exact", "ivf-flat", "ivf-pq"):
+            r = {"n": n, **bench_index(kind, x, q, ref_ids, k=args.k)}
+            results.append(r)
+            print(f"n={n:>7} {kind:>9}: qps={r['qps']:>9} "
+                  f"recall@10={r['recall_at_10']:.3f} build={r['build_s']}s")
+
+    out = pathlib.Path(__file__).parent / "BENCH_retrieval.json"
+    out.write_text(json.dumps(
+        {"batch": args.batch, "k": args.k, "results": results}, indent=2))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

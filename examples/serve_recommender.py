@@ -1,13 +1,15 @@
-"""Serving example: offline index build + batched online recommendation.
+"""Serving example: offline index build + two-stage batched recommendation.
 
   PYTHONPATH=src python examples/serve_recommender.py
 
-1. encodes the full news corpus with the BusLM news encoder (bulk/offline),
+1. encodes the full news corpus with the BusLM news encoder (bulk/offline)
+   and builds the retrieval stack on top (default IVF-PQ: k-means coarse
+   quantizer + residual product quantization, LUT-scored by the Pallas
+   kernel; --index exact|ivf-flat|ivf-pq to switch),
 2. runs a micro-batched request loop (collect up to --batch requests or
-   2 ms), scoring each user's history against the index with exact MIPS
-   (batched dot + top-k) — the TPU-native analogue of the paper's HNSW
-   retrieval, and
-3. reports p50/p99 latency.
+   2 ms): history -> user embedding -> stage-1 ANN recall of k' candidates
+   (main index + fresh-news delta tier) -> stage-2 exact re-rank to top-k,
+3. reports per-request p50/p99 latency (queueing time included).
 """
 from repro.launch import serve
 

@@ -28,8 +28,6 @@ def _kernel(idx_ref, w_ref, table_ref, o_ref):
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    b = pl.program_id(0)
-    f = pl.program_id(1)
     w = w_ref[0, 0, 0]
     o_ref[...] += (table_ref[...].astype(jnp.float32)
                    * w.astype(jnp.float32)).astype(o_ref.dtype)

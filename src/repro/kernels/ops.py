@@ -11,6 +11,7 @@ import jax
 from . import bus_attention as _bus
 from . import embedding_bag as _ebag
 from . import flash_attention as _flash
+from . import pq_scoring as _pq
 
 
 def _interpret() -> bool:
@@ -33,3 +34,8 @@ def bus_attention(q, k, v, kv_mask, *, block_m: int = 8):
 
 def embedding_bag(table, idx, weights=None):
     return _ebag.embedding_bag(table, idx, weights, interpret=_interpret())
+
+
+def pq_lut_scores(lut, codes, *, block_n: int = 128):
+    return _pq.pq_lut_scores(lut, codes, block_n=block_n,
+                             interpret=_interpret())

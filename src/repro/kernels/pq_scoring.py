@@ -1,0 +1,78 @@
+"""PQ asymmetric-distance LUT scoring — Pallas TPU kernel.
+
+The ANN retrieval hot path (serving §5.1.4): after product quantization the
+corpus is [N, M] uint8 codes; a query is turned into a lookup table
+LUT[m, k] = <q_m, codebook[m, k]> and the score of candidate n is
+sum_m LUT[m, codes[n, m]] — a gather + segment accumulate per candidate.
+
+TPU-native design: the per-code gather is hostile to the VPU (random
+lane indexing), so the kernel materializes the codes block as a one-hot
+[block_n, M*K] matrix with broadcasted_iota compares (pure VPU) and turns
+the whole gather+accumulate into ONE [block_n, M*K] x [M*K] MXU contraction
+against the flattened LUT.  Probabilities of the trade: K*M extra FLOPs per
+candidate, zero irregular memory traffic — the MXU is idle during a scan
+anyway, so fusing the gather into a matmul is free throughput.
+
+Layouts:
+  lut    [B, M, K]  f32   one table per query
+  codes  [Bc, N, M] int32 Bc == B (per-query candidate lists, IVF path)
+                          or Bc == 1 (one shared corpus scan, flat-PQ path —
+                          the block index_map broadcasts without copying)
+  out    [B, N]     f32
+
+Grid: (B, N / block_n); the LUT block stays resident across the inner
+dimension while candidate blocks stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(lut_ref, codes_ref, o_ref, *, n_codes: int):
+    lut = lut_ref[0].astype(jnp.float32)            # [M, K]
+    codes = codes_ref[0]                            # [bn, M] int32
+    bn, M = codes.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, M, n_codes), 2)
+    onehot = (iota == codes[:, :, None]).astype(jnp.float32)
+    # gather+accumulate as one MXU contraction against the flattened LUT
+    scores = jax.lax.dot_general(
+        onehot.reshape(bn, M * n_codes), lut.reshape(M * n_codes),
+        (((1,), (0,)), ((), ())))                   # [bn]
+    o_ref[0, :] = scores.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def pq_lut_scores(lut, codes, *, block_n: int = 128,
+                  interpret: bool = True):
+    """lut: [B, M, K] f32; codes: [Bc, N, M] int32 with Bc in {1, B}.
+
+    Returns [B, N] f32: out[b, n] = sum_m lut[b, m, codes[min(b,Bc-1), n, m]].
+    """
+    B, M, K = lut.shape
+    Bc, N, Mc = codes.shape
+    assert Mc == M and Bc in (1, B), (codes.shape, lut.shape)
+    block_n = min(block_n, N)
+    pad = (-N) % block_n
+    if pad:
+        codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
+    Np = N + pad
+    shared = Bc == 1
+    kernel = functools.partial(_kernel, n_codes=K)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Np // block_n),
+        in_specs=[
+            pl.BlockSpec((1, M, K), lambda b, n: (b, 0, 0)),
+            pl.BlockSpec((1, block_n, M),
+                         (lambda b, n: (0, n, 0)) if shared
+                         else (lambda b, n: (b, n, 0))),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, n: (b, n)),
+        out_shape=jax.ShapeDtypeStruct((B, Np), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)
+    return out[:, :N]

@@ -48,3 +48,15 @@ def embedding_bag(table, idx, weights=None):
     if weights is not None:
         emb = emb * weights[..., None].astype(emb.dtype)
     return emb.sum(axis=-2)
+
+
+def pq_lut_scores(lut, codes):
+    """lut: [B, M, K]; codes: [Bc, N, M] (Bc in {1, B}) -> [B, N] f32.
+
+    out[b, n] = sum_m lut[b, m, codes[min(b, Bc-1), n, m]].
+    """
+    gathered = jnp.take_along_axis(
+        lut[:, None, :, :].astype(jnp.float32),          # [B, 1, M, K]
+        codes[:, :, :, None],                            # [Bc, N, M, 1]
+        axis=-1)                                         # [B, N, M, 1]
+    return gathered[..., 0].sum(axis=-1)

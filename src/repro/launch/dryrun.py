@@ -22,7 +22,7 @@ from jax.sharding import NamedSharding
 from repro import configs
 from repro.distributed import sharding as shx
 from . import roofline as rl
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, set_mesh
 
 
 def run_cell(cell, *, multi_pod: bool, verbose: bool = True):
@@ -36,7 +36,7 @@ def run_cell(cell, *, multi_pod: bool, verbose: bool = True):
     try:
         fn = cell.make_fn(mesh)
         args = cell.abstract_args(mesh)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jax.jit(fn).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()

@@ -11,9 +11,11 @@ import jax
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)   # older jax: Auto is the default
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -31,3 +33,13 @@ def make_mesh_for(n_devices: int, *, model: int = 1):
     """Dev/test helper: (data, model) mesh over whatever devices exist."""
     assert n_devices % model == 0
     return _mk((n_devices // model, model), ("data", "model"))
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient, across jax versions:
+    jax.set_mesh (new) > jax.sharding.use_mesh > `with mesh:` (legacy)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh   # Mesh is itself a context manager on older jax

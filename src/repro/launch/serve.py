@@ -1,29 +1,32 @@
-"""Serving launcher: batched news-recommendation service.
+"""Serving launcher: two-stage batched news-recommendation service.
 
-Pipeline (paper §5.1.4 production setup):
-  1. offline: encode the news corpus with the (Bus)LM news encoder -> a
-     candidate embedding index (the paper uses HNSW; we provide exact MIPS
-     via batched dot + top-k, which is the TPU-native choice for <=10^7
-     candidates — one [B, d] x [d, N] einsum saturates the MXU),
+Architecture (paper §5.1.4 production setup, rebuilt on repro.serving):
+  1. offline: encode the news corpus with the (Bus)LM news encoder and
+     build the retrieval tier — exact-flat, IVF-Flat, or IVF-PQ (k-means
+     coarse quantizer + residual product quantization scored by the
+     Pallas LUT kernel); full-precision embeddings stay in the host store
+     for user encoding and re-rank,
   2. online: micro-batched request loop — collect up to ``max_batch``
-     requests or ``max_wait_ms``, encode users (history -> user embedding),
-     score against the index, return top-k news.
+     requests or ``max_wait_ms``, encode users (history -> user
+     embedding), then two-stage retrieve: ANN recall of k' candidates
+     (main index + fresh-news delta tier) followed by exact re-rank to
+     top-k.  Per-request latency includes time spent queued.
 
-Run: python -m repro.launch.serve --requests 64 --batch 16
+Run: python -m repro.launch.serve --requests 64 --batch 16 \
+         [--index ivf-pq|ivf-flat|exact] [--nprobe 8] [--k-prime 64]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import queue
-import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import core, data
+from repro import core, serving
 
 
 @dataclasses.dataclass
@@ -33,27 +36,32 @@ class ServeStats:
     p50_ms: float
     p99_ms: float
     recall_ok: bool
+    index_kind: str = "exact"
+    ntotal: int = 0
 
 
 class Recommender:
-    """Exact-MIPS news recommender service."""
+    """Two-stage (ANN retrieve -> exact re-rank) news recommender."""
 
-    def __init__(self, cfg: core.SpeedyFeedConfig, params, store, *, k=10):
+    def __init__(self, cfg: core.SpeedyFeedConfig, params, store, *, k=10,
+                 index_kind: str = "ivf-pq", nprobe: int = 8,
+                 k_prime: int | None = None):
         self.cfg, self.params, self.store, self.k = cfg, params, store, k
-        self._index = None
+        self.index_kind = index_kind
+        self.nprobe = nprobe
+        self.k_prime = k_prime or max(4 * k, 32)
+        self.service: serving.RetrievalService | None = None
+        self._emb = None          # full-precision [N, d] for user encoding
         self._encode = jax.jit(
             lambda t, f: core.buslm_encode(params["plm"], cfg.plm, t, f))
-        L = cfg.hist_len
 
-        def score(index, hist_inv, hist_mask):
-            theta = index[hist_inv]
-            user = core.attentive_user(params["user"], theta, hist_mask)
-            scores = user @ index.T
-            return jax.lax.top_k(scores, k)
+        def user_encode(emb, hist, hist_mask):
+            theta = emb[hist]
+            return core.attentive_user(params["user"], theta, hist_mask)
 
-        self._score = jax.jit(score)
+        self._user = jax.jit(user_encode)
 
-    def build_index(self, *, chunk: int = 256):
+    def _encode_corpus(self, *, chunk: int = 256):
         """Offline bulk encode of the whole corpus (cells: encode_bulk)."""
         toks = self.store.tokens
         n = toks.shape[0]
@@ -68,35 +76,66 @@ class Recommender:
                 outs.append(np.asarray(self._encode(t, f))[:-pad])
             else:
                 outs.append(np.asarray(self._encode(t, f)))
-        index = np.concatenate(outs)
-        index[0] = 0.0            # pad news scores nothing
-        self._index = jnp.asarray(index)
-        return self._index
+        emb = np.concatenate(outs)
+        emb[0] = 0.0              # pad news scores nothing
+        return emb
+
+    def build_index(self, *, chunk: int = 256, seed: int = 0):
+        """Encode the corpus, then build the retrieval stack on top."""
+        emb = self._encode_corpus(chunk=chunk)
+        self._emb = jnp.asarray(emb)
+        n = emb.shape[0]
+        nlist = max(4, min(64, n // 32))
+        index = serving.make_index(
+            self.index_kind, emb.shape[1],
+            ivf=serving.IVFConfig(nlist=nlist,
+                                  nprobe=min(self.nprobe, nlist)))
+        ids = np.arange(1, n)     # row 0 is the pad news: never a candidate
+        index.train(jax.random.PRNGKey(seed), jnp.asarray(emb[1:]))
+        index.add(ids, emb[1:])
+        self.service = serving.RetrievalService(
+            index, emb, k=self.k, k_prime=min(self.k_prime, n - 1),
+            delta=serving.DeltaBuffer(emb.shape[1]))
+        return self.service
+
+    def publish(self, ids, emb):
+        """Fresh news straight into the serving path (delta tier)."""
+        self.service.publish(ids, emb)
+        # keep the user-encoding matrix in sync with the store: histories
+        # may reference the fresh ids (store grows for out-of-range ids)
+        self._emb = jnp.asarray(self.service.store_emb)
 
     def recommend(self, hist_batch: np.ndarray, mask: np.ndarray):
-        scores, ids = self._score(self._index, jnp.asarray(hist_batch),
-                                  jnp.asarray(mask))
-        return np.asarray(scores), np.asarray(ids)
+        user = self._user(self._emb, jnp.asarray(hist_batch),
+                          jnp.asarray(mask))
+        return self.service.query(np.asarray(user), self.k)
 
 
 def micro_batch_loop(rec: Recommender, requests, *, max_batch: int,
                      max_wait_ms: float = 2.0):
-    """Batched request loop; returns per-request latencies + results."""
+    """Batched request loop; returns per-request latencies + results.
+
+    Each request's latency is measured from the moment it entered the
+    queue to batch completion, so queueing delay (waiting for earlier
+    batches) is part of the number — not one shared batch wall-clock.
+    """
     q = queue.Queue()
     for r in requests:
-        q.put(r)
+        q.put((time.time(), r))
     latencies, results = [], []
     n_batches = 0
     L = rec.cfg.hist_len
     while not q.empty():
-        batch, t_in = [], time.time()
-        deadline = t_in + max_wait_ms / 1e3
+        batch, t_enq = [], []
+        deadline = time.time() + max_wait_ms / 1e3
         while len(batch) < max_batch and (time.time() < deadline
                                           or not batch):
             try:
-                batch.append(q.get_nowait())
+                t0, r = q.get_nowait()
             except queue.Empty:
                 break
+            batch.append(r)
+            t_enq.append(t0)
         hist = np.zeros((max_batch, L), np.int32)
         mask = np.zeros((max_batch, L), bool)
         for i, h in enumerate(batch):
@@ -104,8 +143,8 @@ def micro_batch_loop(rec: Recommender, requests, *, max_batch: int,
             hist[i, :len(h)] = h
             mask[i, :len(h)] = True
         _, ids = rec.recommend(hist, mask)
-        dt = (time.time() - t_in) * 1e3
-        latencies.extend([dt] * len(batch))
+        t_done = time.time()
+        latencies.extend([(t_done - t0) * 1e3 for t0 in t_enq])
         results.extend(ids[:len(batch)])
         n_batches += 1
     return latencies, results, n_batches
@@ -116,16 +155,22 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--index", default="ivf-pq",
+                    choices=["exact", "ivf-flat", "ivf-pq"])
+    ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--k-prime", type=int, default=64)
     args = ap.parse_args(argv)
 
     from repro.launch.train import make_loader, small_speedyfeed_config
     cfg = small_speedyfeed_config()
     corpus, log, store, _ = make_loader(cfg)
     params, _ = core.speedyfeed_state(cfg)
-    rec = Recommender(cfg, params, store, k=args.k)
+    rec = Recommender(cfg, params, store, k=args.k, index_kind=args.index,
+                      nprobe=args.nprobe, k_prime=args.k_prime)
     t0 = time.time()
     rec.build_index()
-    print(f"index built: {store.tokens.shape[0]} news in "
+    print(f"index built: {store.tokens.shape[0]} news "
+          f"({args.index}, ntotal={rec.service.index.ntotal}) in "
           f"{time.time()-t0:.1f}s")
     reqs = [h for h in log.histories[:args.requests]]
     lat, results, n_batches = micro_batch_loop(rec, reqs,
@@ -135,7 +180,11 @@ def main(argv=None):
           f"p50={np.percentile(lat, 50):.1f}ms p99={np.percentile(lat, 99):.1f}ms")
     return ServeStats(len(lat), n_batches, float(np.percentile(lat, 50)),
                       float(np.percentile(lat, 99)),
-                      recall_ok=all(len(r) == args.k for r in results))
+                      recall_ok=all(len(r) == args.k
+                                    and (r != serving.PAD_ID).all()
+                                    for r in results),
+                      index_kind=args.index,
+                      ntotal=rec.service.index.ntotal)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,8 @@
+# Serving & retrieval: ANN indexes (IVF-Flat / IVF-PQ with Pallas LUT
+# scoring), online delta tier, and the two-stage retrieve->re-rank service.
+from .index import (PAD_ID, FlatIndex, IVFConfig, IVFFlatIndex, IVFPQIndex,
+                    make_index)
+from .online import DeltaBuffer, hybrid_search, ingest_from_cache
+from .pq import (PQCodebook, PQConfig, kmeans, pq_decode, pq_encode, pq_lut,
+                 pq_search, pq_train)
+from .service import RetrievalService

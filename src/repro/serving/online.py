@@ -1,0 +1,111 @@
+"""Online index deltas: serve news published after the last index build.
+
+News arrives continuously (the paper's production feed); rebuilding the IVF
+index per article is not an option.  The delta buffer is the standard
+two-tier answer: fresh embeddings land in a small brute-force tier that is
+scanned exactly on every query, results are merged with the main ANN
+index, and once the buffer crosses a threshold it is *compacted* — bulk
+add()ed into the main index (IVF assignment + PQ encode) and cleared.
+
+Embeddings enter either straight from the training cache
+(``ingest_from_cache`` reads core.cache.CacheState rows the trainer already
+paid to encode — serving reuses them for free) or from a fresh
+encoder call (``add``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import NEVER, CacheState
+
+from .index import PAD_ID, FlatIndex
+
+
+class DeltaBuffer:
+    """Brute-force tier for fresh news; id-keyed, newest write wins.
+
+    Storage and exact scan are a FlatIndex (whose add() is already an
+    upsert); this class adds the compaction lifecycle on top.
+    """
+
+    def __init__(self, dim: int, *, compact_threshold: int = 512):
+        self.dim = dim
+        self.compact_threshold = compact_threshold
+        self._flat = FlatIndex(dim)
+
+    def __len__(self) -> int:
+        return self._flat.ntotal
+
+    @property
+    def ids(self):
+        return self._flat._ids
+
+    @property
+    def emb(self):
+        return self._flat._vecs
+
+    def add(self, ids, emb):
+        """Upsert fresh embeddings (re-published ids overwrite in place)."""
+        self._flat.add(ids, emb)
+
+    def search(self, queries, k: int):
+        return self._flat.search(queries, k)
+
+    @property
+    def should_compact(self) -> bool:
+        return len(self) >= self.compact_threshold
+
+    def compact_into(self, index):
+        """Move the buffered embeddings into the main index and clear."""
+        if len(self):
+            index.add(self.ids, self.emb)
+        self._flat = FlatIndex(self.dim)
+
+
+def ingest_from_cache(delta: DeltaBuffer, state: CacheState, ids):
+    """Pull rows the trainer already encoded (cache.py CacheState) into the
+    delta tier; rows never written (written_step == NEVER) are skipped.
+    Returns the number ingested."""
+    ids = np.asarray(ids, np.int64)
+    written = np.asarray(state.written_step)[ids] != int(NEVER)
+    if written.any():
+        emb = np.asarray(jnp.asarray(state.emb)[jnp.asarray(ids[written])])
+        delta.add(ids[written], emb)
+    return int(written.sum())
+
+
+def hybrid_search(index, delta: DeltaBuffer | None, queries, k: int):
+    """Main-index ANN + exact delta scan, merged to one top-k.
+
+    Ids present in both tiers resolve to the delta score (freshest
+    embedding wins), so a query through (index, delta) equals the query
+    after ``delta.compact_into(index)`` whenever the index scan is
+    exhaustive over the compacted ids.
+    """
+    s_main, i_main = index.search(queries, k)
+    if delta is None or len(delta) == 0:
+        return s_main, i_main
+    s_d, i_d = delta.search(queries, k)
+    # a main-index hit whose id also lives in the delta tier is stale —
+    # the delta (freshest) embedding's score replaces it
+    stale = np.isin(i_main, delta.ids)
+    s_main = np.where(stale, -np.inf, s_main)
+    i_main = np.where(stale, PAD_ID, i_main)
+    scores = np.concatenate([s_d, s_main], axis=1)
+    ids = np.concatenate([i_d, i_main], axis=1)
+    out_s = np.full((queries.shape[0], k), -np.inf, np.float32)
+    out_i = np.full((queries.shape[0], k), PAD_ID, np.int64)
+    for b in range(queries.shape[0]):
+        order = np.argsort(-scores[b], kind="stable")
+        seen, picked = set(), []
+        for p in order:
+            if ids[b, p] == PAD_ID or int(ids[b, p]) in seen:
+                continue
+            seen.add(int(ids[b, p]))
+            picked.append(p)
+            if len(picked) == k:
+                break
+        out_s[b, :len(picked)] = scores[b, picked]
+        out_i[b, :len(picked)] = ids[b, picked]
+    return out_s, out_i

@@ -1,0 +1,75 @@
+"""Two-stage retrieval service: ANN recall@k' -> exact re-rank -> top-k.
+
+The production pattern (paper §5.1.4): stage 1 asks the compressed/ANN
+tier for k' >> k candidates (cheap, approximate); stage 2 re-scores just
+those k' with the full-precision embeddings the encoder already produced
+(one [B, k', d] gather + einsum) and returns the exact top-k of the
+candidate set.  Quantization error then only matters when it pushes a
+true top-k item out of the top-k' — recall@k' is the only knob.
+
+The service owns the full-precision store (global-id -> embedding), the
+main ANN index and the online delta tier; ``publish`` is the single
+entry point for fresh news and triggers threshold compaction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .index import PAD_ID, _topk_padded
+from .online import DeltaBuffer, hybrid_search
+
+
+class RetrievalService:
+    """index + delta + full-precision re-rank behind one query() call."""
+
+    def __init__(self, index, store_emb, *, k: int = 10,
+                 k_prime: int | None = None,
+                 delta: DeltaBuffer | None = None):
+        """store_emb: [N_global, d] full-precision embeddings keyed by
+        global news id (row 0 = pad news, never a candidate)."""
+        self.index = index
+        self.store_emb = np.asarray(store_emb, np.float32)
+        self.k = k
+        self.k_prime = k_prime or max(4 * k, 32)
+        self.delta = delta
+        self._rerank = jax.jit(self._rerank_fn)
+
+    @staticmethod
+    def _rerank_fn(q, cand_vecs, valid):
+        s = jnp.einsum("bd,bcd->bc", q, cand_vecs)
+        return jnp.where(valid, s, -jnp.inf)
+
+    def publish(self, ids, emb):
+        """Fresh news: update the full-precision store, feed the delta
+        tier, compact into the main index past the threshold."""
+        ids = np.asarray(ids, np.int64)
+        emb = np.asarray(emb, np.float32)
+        if ids.max(initial=-1) >= self.store_emb.shape[0]:
+            grow = int(ids.max()) + 1 - self.store_emb.shape[0]
+            self.store_emb = np.concatenate(
+                [self.store_emb,
+                 np.zeros((grow, self.store_emb.shape[1]), np.float32)])
+        self.store_emb[ids] = emb
+        if self.delta is None:
+            self.index.add(ids, emb)
+            return
+        self.delta.add(ids, emb)
+        if self.delta.should_compact:
+            self.delta.compact_into(self.index)
+
+    def query(self, user_emb, k: int | None = None):
+        """user_emb: [B, d] -> (scores [B, k], ids [B, k]).
+
+        Stage 1: ANN + delta hybrid recall of k' candidate ids.
+        Stage 2: exact re-rank of the candidates in full precision.
+        """
+        k = k or self.k
+        q = np.asarray(user_emb, np.float32)
+        _, cand = hybrid_search(self.index, self.delta, q, self.k_prime)
+        safe = np.where(cand == PAD_ID, 0, cand)       # row 0 scores nothing
+        cand_vecs = self.store_emb[safe]               # [B, k', d]
+        scores = self._rerank(jnp.asarray(q), jnp.asarray(cand_vecs),
+                              jnp.asarray(cand != PAD_ID))
+        return _topk_padded(scores, cand, k)

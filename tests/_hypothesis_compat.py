@@ -1,0 +1,26 @@
+"""Optional-hypothesis shim: property tests skip cleanly when hypothesis
+is not installed, while the rest of the module still collects and runs.
+
+Usage (in test modules):  from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:      # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        """Stands in for hypothesis.strategies: any call returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import core
 
@@ -190,8 +190,10 @@ def test_speedyfeed_step_trains():
     batch = make_batch(cfg, key)
     losses = []
     for i in range(8):
+        # fixed rng: negatives stay the same so the re-fit objective is
+        # stationary (per-step resampling drowns 8 steps of lr=1e-4 in noise)
         params, opt, cache, m = step(params, opt, cache, jnp.int32(i),
-                                     jax.random.fold_in(key, i), batch)
+                                     jax.random.fold_in(key, 0), batch)
         losses.append(float(m["loss"]))
         assert np.isfinite(losses[-1])
     assert losses[-1] < losses[0]    # same batch re-fit: loss must drop

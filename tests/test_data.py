@@ -2,7 +2,7 @@
 batching invariants, graph sampling."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro import data
 from repro.data import graph as gdata

@@ -1,0 +1,214 @@
+"""Serving subsystem: PQ reconstruction, IVF recall vs exact MIPS, online
+delta/compaction equivalence, and Pallas LUT-kernel parity (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import serving
+from repro.kernels import ref
+from repro.kernels.pq_scoring import pq_lut_scores as pq_raw
+
+
+def make_corpus(n=2000, d=32, rank=8, seed=0):
+    """Low-rank + noise vectors — the spectral shape of PLM embeddings
+    (iid Gaussian is the PQ-adversarial case and not what encoders emit)."""
+    rng = np.random.default_rng(seed)
+    basis = rng.normal(size=(rank, d))
+    x = rng.normal(size=(n, rank)) @ basis + 0.1 * rng.normal(size=(n, d))
+    return x.astype(np.float32)
+
+
+def recall_at_k(ids, ref_ids):
+    k = ids.shape[1]
+    return np.mean([len(set(ids[b]) & set(ref_ids[b])) / k
+                    for b in range(ids.shape[0])])
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x = make_corpus()
+    q = make_corpus(16, seed=7)
+    ids = np.arange(1, x.shape[0] + 1)
+    exact = serving.FlatIndex(x.shape[1])
+    exact.add(ids, x)
+    _, ref_ids = exact.search(q, 10)
+    return x, q, ids, ref_ids
+
+
+# ---------------------------------------------------------------- PQ core
+def test_pq_reconstruction_error_bound():
+    x = make_corpus(1000)
+    cfg = serving.PQConfig(n_subvec=16, n_codes=64)
+    cb = serving.pq_train(jax.random.PRNGKey(0), jnp.asarray(x), cfg)
+    codes = serving.pq_encode(cb, jnp.asarray(x))
+    assert codes.shape == (1000, 16) and codes.dtype == jnp.int32
+    assert int(codes.max()) < cfg.n_codes and int(codes.min()) >= 0
+    rec = np.asarray(serving.pq_decode(cb, codes))
+    rel = np.linalg.norm(rec - x) / np.linalg.norm(x)
+    assert rel < 0.25, f"PQ relative reconstruction error {rel:.3f}"
+
+
+def test_pq_lut_matches_decoded_dot():
+    """ADC score == <q, decode(codes)> exactly (same codebook arithmetic)."""
+    x, q = make_corpus(256), make_corpus(4, seed=3)
+    cb = serving.pq_train(jax.random.PRNGKey(1), jnp.asarray(x),
+                          serving.PQConfig())
+    codes = serving.pq_encode(cb, jnp.asarray(x))
+    lut = serving.pq_lut(cb, jnp.asarray(q))
+    scores = ref.pq_lut_scores(lut, codes[None])
+    exp = q @ np.asarray(serving.pq_decode(cb, codes)).T
+    np.testing.assert_allclose(np.asarray(scores), exp, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- Pallas LUT
+@pytest.mark.parametrize("B,M,K,N,block_n,shared", [
+    (4, 8, 32, 300, 128, False),    # per-query candidate lists (IVF path)
+    (4, 8, 32, 300, 128, True),     # one shared corpus scan (flat-PQ path)
+    (1, 4, 256, 64, 64, True),      # K=256 (uint8-style codebooks)
+    (3, 16, 16, 129, 32, False),    # N not a multiple of block_n
+])
+def test_pq_kernel_matches_xla_reference(B, M, K, N, block_n, shared):
+    key = jax.random.PRNGKey(B * 100 + N)
+    k1, k2 = jax.random.split(key)
+    lut = jax.random.normal(k1, (B, M, K))
+    codes = jax.random.randint(k2, (1 if shared else B, N, M), 0, K)
+    out = pq_raw(lut, codes, block_n=block_n, interpret=True)
+    exp = ref.pq_lut_scores(lut, codes)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pq_search_flat_scan(corpus):
+    """Full ADC scan through the kernel: the compressed top-50 covers the
+    true top-10 (the stage-1 recall property two-stage serving rests on)."""
+    x, q, ids, ref_ids = corpus
+    cb = serving.pq_train(jax.random.PRNGKey(2), jnp.asarray(x),
+                          serving.PQConfig(n_subvec=16, n_codes=32))
+    codes = serving.pq_encode(cb, jnp.asarray(x))
+    _, rows = serving.pq_search(cb, codes, q, 50)
+    got = ids[np.asarray(rows)]
+    covered = np.mean([len(set(got[b]) & set(ref_ids[b])) / ref_ids.shape[1]
+                       for b in range(got.shape[0])])
+    assert covered >= 0.9
+
+
+# -------------------------------------------------------------- IVF recall
+def test_ivf_flat_recall_at_10(corpus):
+    x, q, ids, ref_ids = corpus
+    idx = serving.make_index("ivf-flat", x.shape[1],
+                             ivf=serving.IVFConfig(nlist=32, nprobe=8))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    idx.add(ids, x)
+    _, got = idx.search(q, 10)
+    assert recall_at_k(got, ref_ids) >= 0.9
+
+
+def test_ivfpq_two_stage_recall_at_10(corpus):
+    """The served configuration: IVF-PQ recall@k' + exact re-rank."""
+    x, q, ids, ref_ids = corpus
+    idx = serving.make_index("ivf-pq", x.shape[1],
+                             ivf=serving.IVFConfig(nlist=32, nprobe=8))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    idx.add(ids, x)
+    store = np.zeros((x.shape[0] + 1, x.shape[1]), np.float32)
+    store[ids] = x
+    svc = serving.RetrievalService(idx, store, k=10, k_prime=100)
+    _, got = svc.query(q)
+    assert recall_at_k(got, ref_ids) >= 0.9
+
+
+def test_exact_index_is_the_oracle(corpus):
+    x, q, ids, ref_ids = corpus
+    idx = serving.make_index("exact", x.shape[1])
+    idx.train(jax.random.PRNGKey(0), x)
+    idx.add(ids, x)
+    _, got = idx.search(q, 10)
+    assert recall_at_k(got, ref_ids) == 1.0
+
+
+# ------------------------------------------------------------ online delta
+def test_delta_hybrid_equals_post_compaction(corpus):
+    """Hybrid (main + delta) top-k == top-k after compacting the delta into
+    the main index, with an exhaustive scan (nprobe = nlist)."""
+    x, q, ids, _ = corpus
+    n_main = 1800
+    cfg = serving.IVFConfig(nlist=16, nprobe=16)
+    a = serving.make_index("ivf-flat", x.shape[1], ivf=cfg)
+    a.train(jax.random.PRNGKey(0), jnp.asarray(x[:n_main]))
+    a.add(ids[:n_main], x[:n_main])
+    delta = serving.DeltaBuffer(x.shape[1], compact_threshold=10 ** 9)
+    delta.add(ids[n_main:], x[n_main:])
+    s_h, i_h = serving.hybrid_search(a, delta, q, 10)
+
+    delta.compact_into(a)
+    assert len(delta) == 0 and a.ntotal == x.shape[0]
+    s_c, i_c = a.search(q, 10)
+    np.testing.assert_array_equal(i_h, i_c)
+    np.testing.assert_allclose(s_h, s_c, rtol=1e-5, atol=1e-5)
+
+
+def test_delta_upsert_freshest_wins(corpus):
+    """A re-published id is served from the delta tier, not the stale row."""
+    x, q, ids, _ = corpus
+    main = serving.FlatIndex(x.shape[1])
+    main.add(ids, x)
+    delta = serving.DeltaBuffer(x.shape[1])
+    # republish id 1 with an embedding that should now win every query
+    fresh = 10.0 * q[0] / np.linalg.norm(q[0])
+    delta.add([1], fresh[None])
+    _, i_h = serving.hybrid_search(main, delta, q[:1], 5)
+    assert i_h[0, 0] == 1
+    assert (i_h[0] != serving.PAD_ID).all()
+    assert len(set(i_h[0].tolist())) == 5       # no duplicate ids
+
+
+def test_ingest_from_cache():
+    from repro.core.cache import CacheConfig, CacheState, NEVER, init_cache
+    cfg = CacheConfig(n_news=50, news_dim=8)
+    state = init_cache(cfg)
+    emb = jnp.arange(50 * 8, dtype=jnp.float32).reshape(50, 8)
+    written = state.written_step.at[jnp.array([3, 7])].set(5)
+    state = CacheState(emb, written)
+    delta = serving.DeltaBuffer(8)
+    n = serving.ingest_from_cache(delta, state, [3, 7, 9])
+    assert n == 2 and len(delta) == 2           # id 9 was never encoded
+    np.testing.assert_allclose(delta.emb[0], np.asarray(emb[3]))
+
+
+def test_republish_then_compact_does_not_duplicate(corpus):
+    """A re-published id compacted into the main index replaces the stale
+    row (index add() is an upsert) — no duplicate ids in top-k."""
+    x, q, ids, _ = corpus
+    for kind in ("exact", "ivf-flat"):
+        idx = serving.make_index(kind, x.shape[1],
+                                 ivf=serving.IVFConfig(nlist=8, nprobe=8))
+        idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+        idx.add(ids, x)
+        delta = serving.DeltaBuffer(x.shape[1], compact_threshold=1)
+        fresh = 10.0 * q[0] / np.linalg.norm(q[0])
+        delta.add([5], fresh[None])
+        delta.compact_into(idx)
+        assert idx.ntotal == x.shape[0]         # replaced, not appended
+        _, got = idx.search(q[:1], 5)
+        assert got[0, 0] == 5
+        assert len(set(got[0].tolist())) == 5   # no duplicates
+
+
+def test_service_publish_compacts_past_threshold(corpus):
+    x, q, ids, _ = corpus
+    idx = serving.make_index("ivf-flat", x.shape[1],
+                             ivf=serving.IVFConfig(nlist=8, nprobe=8))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x[:1000]))
+    idx.add(ids[:1000], x[:1000])
+    store = np.zeros((x.shape[0] + 1, x.shape[1]), np.float32)
+    store[ids[:1000]] = x[:1000]
+    svc = serving.RetrievalService(
+        idx, store, k=10, k_prime=64,
+        delta=serving.DeltaBuffer(x.shape[1], compact_threshold=600))
+    svc.publish(ids[1000:1500], x[1000:1500])   # below threshold: delta tier
+    assert len(svc.delta) == 500 and idx.ntotal == 1000
+    svc.publish(ids[1500:2000], x[1500:2000])   # crosses: compaction fires
+    assert len(svc.delta) == 0 and idx.ntotal == 2000
+    _, got = svc.query(q)
+    assert (got != serving.PAD_ID).all()
