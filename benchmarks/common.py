@@ -50,7 +50,7 @@ def bench_corpus(cfg, *, n_news=1200, n_users=300, seed=0):
     lcfg = data.LoaderConfig(vocab=cfg.plm.vocab,
                              n_segments=cfg.plm.n_segments,
                              seg_len=cfg.plm.seg_len,
-                             buckets=(cfg.plm.seg_len // 2, cfg.plm.seg_len),
+                             buckets=data.default_buckets(cfg.plm.seg_len),
                              token_budget=6000, b_cap=cfg.batch_users,
                              m_cap=cfg.merged_cap, hist_len=cfg.hist_len)
     store = data.NewsStore(corpus, stats, lcfg)
@@ -73,4 +73,5 @@ def conventional_batch_from_log(cfg, log, store, lcfg, *, n_users=None,
 def as_device(batch):
     batch = dict(batch)
     batch.pop("_stats", None)
+    batch.pop("_bucket", None)
     return {k: jnp.asarray(v) for k, v in batch.items()}

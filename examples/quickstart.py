@@ -4,15 +4,12 @@
 
 Builds a synthetic Microsoft-News-like click log, then runs Algorithm 1
 (centralized encoding -> cache -> BusLM -> autoregressive loss) for 40
-steps and prints the loss curve + cache behaviour.
+steps through the unified training runtime: a registry-built Trainer with
+one warm donated executable per seg-length bucket, fed by the async
+device prefetcher.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import core, data, optim
-from repro.configs.speedyfeed_arch import make_sf_train_step
-from repro.launch.train import make_loader, pad_seg, small_speedyfeed_config
+from repro import data, training
+from repro.launch.train import make_loader, small_speedyfeed_config
 
 
 def main():
@@ -20,35 +17,22 @@ def main():
     corpus, log, store, lcfg = make_loader(cfg, seed=0)
     print(f"corpus: {corpus.n_news} news, {log.n_users} users; "
           f"PLM {cfg.plm.n_layers}L x {cfg.plm.d_model}d, "
-          f"K={cfg.plm.n_segments} segments")
+          f"K={cfg.plm.n_segments} segments; buckets {lcfg.buckets}")
 
-    key = jax.random.PRNGKey(0)
-    params, cache = core.speedyfeed_state(cfg, key)
-    opt = optim.adam_init(params)
-    step_fn = jax.jit(make_sf_train_step(cfg))
+    trainer = training.get_trainer("speedyfeed", cfg=cfg)
 
-    batcher = data.DynamicBatcher(log, store, lcfg, n_threads=2).start()
-    try:
-        for step in range(40):
-            batch = batcher.get(timeout=10.0)
-            if batch is None:
-                break
-            stats = batch.pop("_stats")
-            batch = pad_seg(batch, cfg.plm.seg_len)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            params, opt, cache, m = step_fn(
-                params, opt, cache, jnp.int32(step),
-                jax.random.fold_in(key, step), batch)
-            if step % 10 == 0:
-                print(f"step {step:3d}  loss={float(m['loss']):.4f}  "
-                      f"ar_acc={float(m['ar_acc']):.3f}  "
-                      f"encoded={int(m['encoded'])}  "
-                      f"reused={int(m['reused'])}  "
-                      f"p_t={float(m['p_t']):.2f}  "
-                      f"DE={stats['data_efficiency']:.2f}")
-    finally:
-        batcher.stop()
-    print("done — the cache reuse count should rise as p_t grows.")
+    def make_batcher(epoch):
+        return data.DynamicBatcher(log, store, lcfg, n_threads=2,
+                                   seed=epoch).start()
+
+    res = trainer.fit(make_batcher, steps=40, log_every=10)
+    print(f"done in {res.wall_seconds:.1f}s — loss "
+          f"{res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
+          f"final ar_acc={res.metrics.get('ar_acc', 0):.3f}")
+    print(f"bucket executables: {res.compile_counts} (compiles/bucket), "
+          f"steps/bucket {res.bucket_steps}, "
+          f"host stall {res.host_stall_fraction:.1%}")
+    print("the cache reuse count should rise as p_t grows.")
 
 
 if __name__ == "__main__":

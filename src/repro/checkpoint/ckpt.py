@@ -75,8 +75,16 @@ def latest_step(ckpt_dir: str):
         return None
 
 
-def restore(ckpt_dir: str, like, step: int | None = None):
+def restore(ckpt_dir: str, like, step: int | None = None, *,
+            aliases: dict | None = None, missing_ok=()):
     """Restore into the structure of ``like`` (a pytree or abstract tree).
+
+    ``aliases`` maps a current flattened key to the legacy on-disk key that
+    is read instead when the current key is absent (layout migrations, e.g.
+    ``{"cache::written_step": "cache::age"}``). Keys listed in ``missing_ok``
+    may be absent entirely; the corresponding ``like`` leaf (which must then
+    be concrete) is kept as-is — this lets a grown train state load
+    checkpoints written before the new fields existed.
 
     Returns (step, tree). Raises FileNotFoundError when no checkpoint exists.
     """
@@ -85,12 +93,20 @@ def restore(ckpt_dir: str, like, step: int | None = None):
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     data = np.load(os.path.join(path, "arrays.npz"))
+    aliases = aliases or {}
     flat, tdef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in flat:
         key = SEP.join(
             str(q.key) if hasattr(q, "key") else str(q.idx) for q in p)
-        arr = data[key if key else "_root"]
+        key = key if key else "_root"
+        disk_key = key if key in data.files else aliases.get(key)
+        if disk_key is None or disk_key not in data.files:
+            if key in missing_ok or key.split(SEP)[0] in missing_ok:
+                leaves.append(leaf)
+                continue
+            raise KeyError(f"checkpoint {path} has no array for {key}")
+        arr = data[disk_key]
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")

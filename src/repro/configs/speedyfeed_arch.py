@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro import core, optim
+from repro import core, optim, training
 from repro.distributed import sharding as shx
 from repro.optim.adam import adam_update
 from .base import (Arch, Cell, F32, I32, abstract_opt, abstract_params,
@@ -65,6 +65,44 @@ def make_conventional_step(cfg: core.SpeedyFeedConfig):
         return core.conventional_forward(params, cfg, batch)
 
     return optim.make_train_step(loss_fn, SF_OPT)
+
+
+# ---------------------------------------------------------------------------
+# training-runtime integration (repro.training)
+# ---------------------------------------------------------------------------
+
+def _sf_init_state(cfg, key) -> training.TrainState:
+    params, cache = core.speedyfeed_state(cfg, key)
+    return training.make_state(params, optim.adam_init(params), cache,
+                               rng=key)
+
+
+@training.register_trainer("speedyfeed")
+def make_sf_trainer(cfg=None, **kw) -> training.Trainer:
+    """Bucket-aware donated Trainer for Algorithm 1 (the registry entry the
+    launchers use; PROD config unless overridden)."""
+    return training.Trainer(cfg if cfg is not None else PROD,
+                            make_step=make_sf_train_step,
+                            init_fn=_sf_init_state, **kw)
+
+
+def _make_conventional_state_step(cfg):
+    """Adapt the conventional baseline to the TrainState step contract
+    (cache travels untouched; the baseline re-encodes everything)."""
+    raw = make_conventional_step(cfg)
+
+    def step_fn(params, opt_state, cache, step, rng, batch):
+        params, opt_state, metrics = raw(params, opt_state, batch)
+        return params, opt_state, cache, metrics
+
+    return step_fn
+
+
+@training.register_trainer("speedyfeed_conventional")
+def make_conventional_trainer(cfg=None, **kw) -> training.Trainer:
+    return training.Trainer(cfg if cfg is not None else PROD,
+                            make_step=_make_conventional_state_step,
+                            init_fn=_sf_init_state, **kw)
 
 
 def _sf_params_abs(cfg, mesh):
@@ -154,7 +192,9 @@ def _arch() -> Arch:
     cells = {}
 
     def train_make(mesh):
-        return make_sf_train_step(cfg)
+        # the cell lowers the Trainer's own state step, so the dry-run
+        # compiles exactly the executable the training runtime runs
+        return make_sf_trainer(cfg).state_step
 
     def train_args(mesh):
         pa, specs = _sf_params_abs(cfg, mesh)
@@ -169,31 +209,39 @@ def _arch() -> Arch:
         rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
         if mesh is not None:
             rng = shard_abstract(rng, P(None), mesh)
-        return (pa, oa, ca, step, rng, _train_batch_abs(cfg, mesh))
+        state_abs = training.TrainState(pa, oa, ca, step, rng)
+        return (state_abs, _train_batch_abs(cfg, mesh))
 
     enc_flops = core.plm_flops(cfg.plm, cfg.cache.encode_budget)
     cells["train_prod"] = Cell(
         arch="speedyfeed", shape="train_prod", kind="train",
         make_fn=train_make, abstract_args=train_args,
         activation_specs=functools.partial(_act_specs, kind="train"),
-        meta={"model_flops": 3 * enc_flops})
+        meta={"model_flops": 3 * enc_flops, "donate_argnums": (0,)})
 
     def conv_make(mesh):
-        return make_conventional_step(cfg)
+        return make_conventional_trainer(cfg).state_step
 
     def conv_args(mesh):
         pa, specs = _sf_params_abs(cfg, mesh)
         oa = abstract_opt(pa)
         if mesh is not None:
             oa = shard_abstract(oa, opt_spec_tree(specs), mesh)
-        return (pa, oa, _conv_batch_abs(cfg, mesh))
+        ca = _cache_abs(cfg, mesh)
+        step = sds((), I32, mesh, P())
+        rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+        if mesh is not None:
+            rng = shard_abstract(rng, P(None), mesh)
+        state_abs = training.TrainState(pa, oa, ca, step, rng)
+        return (state_abs, _conv_batch_abs(cfg, mesh))
 
     n_conv = CONV_BATCH["users"] * (CONV_BATCH["hist"] + CONV_BATCH["cands"])
     cells["train_conventional"] = Cell(
         arch="speedyfeed", shape="train_conventional", kind="train",
         make_fn=conv_make, abstract_args=conv_args,
         activation_specs=functools.partial(_act_specs, kind="train"),
-        meta={"model_flops": 3 * core.plm_flops(cfg.plm, n_conv)})
+        meta={"model_flops": 3 * core.plm_flops(cfg.plm, n_conv),
+              "donate_argnums": (0,)})
 
     def enc_make(mesh):
         return lambda p, t, f: core.buslm_encode(p["plm"], cfg.plm, t, f)

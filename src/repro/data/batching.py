@@ -20,12 +20,28 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import numpy as np
 
 from repro.distributed.straggler import WorkStealingQueue
 from .news_synth import ClickLog, NewsCorpus
 from .refine import CorpusStats, refined_tokens
+
+
+class Sentinel:
+    """Named identity-compared marker (``is`` against the module-level
+    instance); shared by the loader and prefetcher stream contracts."""
+
+    def __init__(self, name: str):
+        self._name = name
+
+    def __repr__(self):
+        return self._name
+
+
+# epoch exhausted — distinct from a timeout, which ``get`` signals with None
+EPOCH_END = Sentinel("EPOCH_END")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +90,32 @@ def bucket_for(length: int, buckets) -> int:
     return buckets[-1]
 
 
+def default_buckets(seg_len: int, base: tuple | None = None) -> tuple:
+    """Derive the seg-length bucket set for a config from the LoaderConfig
+    defaults, clipped to ``seg_len`` (which is always the top bucket)."""
+    base = base if base is not None else LoaderConfig.buckets
+    return tuple(sorted({min(int(b), int(seg_len))
+                         for b in base} | {int(seg_len)}))
+
+
+def synth_centralized_batch(*, m_cap: int, n_segments: int, seg_len: int,
+                            b_cap: int, hist_len: int, vocab: int,
+                            seed: int = 0) -> dict:
+    """Random centralized batch with the loader's schema/dtypes — executable
+    warm-up and schema-shaped tests (single source of truth for the batch
+    keys)."""
+    rng = np.random.default_rng(seed)
+    return {
+        "news_tokens": rng.integers(
+            1, vocab, (m_cap, n_segments, seg_len)).astype(np.int32),
+        "news_freq": rng.integers(
+            0, 8, (m_cap, n_segments, seg_len)).astype(np.int32),
+        "news_ids": np.arange(m_cap, dtype=np.int32),
+        "hist_inv": rng.integers(1, m_cap, (b_cap, hist_len)).astype(np.int32),
+        "hist_mask": np.ones((b_cap, hist_len), bool),
+    }
+
+
 def build_centralized_batch(instances, store: NewsStore, cfg: LoaderConfig,
                             seg_len: int):
     """instances: list of np arrays of news ids -> centralized batch dict."""
@@ -106,6 +148,7 @@ def build_centralized_batch(instances, store: NewsStore, cfg: LoaderConfig,
         "news_ids": ids.astype(np.int32),
         "hist_inv": inv,
         "hist_mask": mask,
+        "_bucket": seg_len,
         "_stats": {
             "seg_len": seg_len,
             "n_unique": int(len(uniq)),
@@ -149,7 +192,13 @@ def build_conventional_batch(instances, store: NewsStore, cfg: LoaderConfig,
 
 
 class DynamicBatcher:
-    """Multi-threaded bucketed loader -> queue of centralized batches."""
+    """Multi-threaded bucketed loader -> queue of centralized batches.
+
+    ``get`` distinguishes the two empty-queue cases: ``EPOCH_END`` when every
+    worker has drained its shard (including the final partial buckets), and
+    ``None`` when the call merely timed out while workers are still
+    producing. Callers must not treat ``None`` as end-of-data.
+    """
 
     def __init__(self, log: ClickLog, store: NewsStore, cfg: LoaderConfig,
                  *, n_threads: int = 2, seed: int = 0):
@@ -159,8 +208,21 @@ class DynamicBatcher:
         self._seed = seed
         self._stop = threading.Event()
         self._threads = []
+        self._done = 0
+        self._done_lock = threading.Lock()
+        self._error: BaseException | None = None
 
     def _worker(self, shard: int):
+        try:
+            self._produce(shard)
+        except BaseException as e:   # surfaced by get(); a dead worker must
+            self._error = e          # not leave the epoch hanging forever
+        finally:
+            if not self._stop.is_set():
+                with self._done_lock:
+                    self._done += 1
+
+    def _produce(self, shard: int):
         rng = np.random.default_rng(self._seed + shard)
         buckets = {b: [] for b in self.cfg.buckets}
         fill = {b: 0 for b in self.cfg.buckets}
@@ -196,8 +258,29 @@ class DynamicBatcher:
             self._threads.append(t)
         return self
 
+    def exhausted(self) -> bool:
+        """All workers finished their shard (final partials already queued)."""
+        with self._done_lock:
+            return bool(self._threads) and self._done >= self.n_threads
+
     def get(self, timeout: float = 5.0):
-        return self.queue.get(0, timeout=timeout)
+        """Next batch, ``EPOCH_END`` once the epoch is fully drained, or
+        ``None`` on timeout (loader still running, just slow). Re-raises a
+        worker's exception instead of hanging on its missing shard."""
+        deadline = time.monotonic() + timeout
+        while True:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            item = self.queue.get(0, timeout=0.02)
+            if item is not None:
+                return item
+            if self.exhausted() and self.queue.qsize() == 0:
+                if self._error is not None:   # a crash is not a clean epoch:
+                    continue                  # re-loop raises it, not EPOCH_END
+                return EPOCH_END
+            if time.monotonic() >= deadline:
+                return None
 
     def stop(self):
         self._stop.set()

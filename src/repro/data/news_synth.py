@@ -46,12 +46,27 @@ def _words_for(rng, topic, n, n_topics):
 
 
 def make_corpus(rng: np.random.Generator, *, n_news: int = 2000,
-                n_topics: int = 16, zipf_a: float = 1.6) -> NewsCorpus:
+                n_topics: int = 16, zipf_a: float = 1.6,
+                short_frac: float = 0.8) -> NewsCorpus:
+    """``short_frac`` of the news are headline-style (MIND-like: title and a
+    short or missing body), giving the long-tailed *token*-length
+    distribution that makes seg-length bucketing (§4.2.2, Figure 8)
+    meaningful — full-length articles saturate every segment after OBoW
+    refinement, so without short news all batches land in the top bucket."""
     topics = rng.integers(0, n_topics, n_news)
     lengths = np.clip(rng.lognormal(6.0, 0.7, n_news), 40, 3000).astype(int)
+    short = rng.random(n_news) < short_frac
     titles, abstracts, bodies = [], [], []
     for i in range(n_news):
         L = lengths[i]
+        if short[i]:
+            L = int(np.clip(rng.lognormal(2.0, 0.9), 3, 60))
+            titles.append(_words_for(rng, topics[i], max(3, L // 3),
+                                     n_topics))
+            abstracts.append(_words_for(rng, topics[i], max(4, L // 2),
+                                        n_topics))
+            bodies.append(_words_for(rng, topics[i], L, n_topics))
+            continue
         titles.append(_words_for(rng, topics[i], max(4, L // 40), n_topics))
         abstracts.append(_words_for(rng, topics[i], max(8, L // 10), n_topics))
         bodies.append(_words_for(rng, topics[i], L, n_topics))
@@ -73,9 +88,13 @@ class ClickLog:
 
 
 def make_click_log(rng: np.random.Generator, corpus: NewsCorpus, *,
-                   n_users: int = 500, mean_clicks: float = 15.0,
+                   n_users: int = 500, mean_clicks: float = 8.0,
                    max_hist: int = 100, topic_affinity: float = 0.8
                    ) -> ClickLog:
+    """MIND-like activity: lognormal click counts with median
+    ``mean_clicks`` (most users have short histories, a long tail reaches
+    ``max_hist``) — short histories over a mostly-headline corpus are what
+    populate the lower seg-length buckets in the dynamic batcher."""
     n_topics = corpus.topics.max() + 1
     histories = []
     for _ in range(n_users):

@@ -36,8 +36,11 @@ def run_cell(cell, *, multi_pod: bool, verbose: bool = True):
     try:
         fn = cell.make_fn(mesh)
         args = cell.abstract_args(mesh)
+        donate = cell.meta.get("donate_argnums", ())
         with set_mesh(mesh):
-            lowered = jax.jit(fn).lower(*args)
+            # donation must match the runtime executable (train cells donate
+            # the TrainState), or memory_analysis double-counts the state
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
             t_lower = time.time() - t0
             compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower

@@ -3,7 +3,16 @@
   python -m repro.launch.train --arch speedyfeed --steps 200 \
       --ckpt-dir /tmp/ckpt --ckpt-every 50
 
-Features exercised here (and tested in tests/test_train_loop.py):
+The speedyfeed path runs through the unified training runtime
+(``repro.training``): registry-built Trainer with one warm donated
+executable per seg-length bucket (batches run at their bucket length —
+nothing is padded back to the global max), async host->device prefetch fed
+by the DynamicBatcher with explicit end-of-epoch turnover, lazy metrics
+drain, and TrainState checkpoints that still restore pre-Trainer
+``{params, opt, cache:{emb, age}}`` snapshots.
+
+Features exercised here (and tested in tests/test_system.py +
+tests/test_training.py):
   * SpeedyFeed Algorithm-1 loop on synthetic Microsoft-News-like data with
     the dynamic-batching loader (background threads, work stealing),
   * checkpoint/restart: atomic snapshots incl. the news-embedding cache;
@@ -14,27 +23,11 @@ Features exercised here (and tested in tests/test_train_loop.py):
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import os
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import checkpoint as ckpt
-from repro import configs, core, data, optim
-from repro.configs.speedyfeed_arch import SF_OPT, make_sf_train_step
-from repro.distributed.straggler import StepTimeMonitor
-
-
-@dataclasses.dataclass
-class TrainResult:
-    steps_done: int
-    losses: list
-    resumed_from: int | None
-    wall_seconds: float
-    metrics: dict
+from repro import configs, core, data, training
+from repro.training import TrainResult  # re-export (legacy import path)
 
 
 def small_speedyfeed_config(**over):
@@ -46,104 +39,42 @@ def small_speedyfeed_config(**over):
     return core.make_config(**base)
 
 
-def make_loader(cfg, *, n_news=2000, n_users=400, seed=0):
+def make_loader(cfg, *, n_news=2000, n_users=400, seed=0, buckets=None,
+                token_budget=4000, corpus_kw=None, log_kw=None):
     rng = np.random.default_rng(seed)
-    corpus = data.make_corpus(rng, n_news=n_news)
+    corpus = data.make_corpus(rng, n_news=n_news, **(corpus_kw or {}))
     log = data.make_click_log(rng, corpus, n_users=n_users,
-                              max_hist=cfg.hist_len)
+                              max_hist=cfg.hist_len, **(log_kw or {}))
     stats = data.build_corpus_stats(
         [corpus.text(i) for i in range(corpus.n_news)])
     lcfg = data.LoaderConfig(
         vocab=cfg.plm.vocab, n_segments=cfg.plm.n_segments,
         seg_len=cfg.plm.seg_len,
-        buckets=tuple(sorted({cfg.plm.seg_len // 2, cfg.plm.seg_len})),
-        token_budget=4000, b_cap=cfg.batch_users, m_cap=cfg.merged_cap,
+        buckets=buckets or data.default_buckets(cfg.plm.seg_len),
+        token_budget=token_budget, b_cap=cfg.batch_users, m_cap=cfg.merged_cap,
         hist_len=cfg.hist_len)
     store = data.NewsStore(corpus, stats, lcfg)
     return corpus, log, store, lcfg
 
 
-def pad_seg(batch, seg_len):
-    """Pad a bucketed batch back to the executable's static seg length."""
-    t = batch["news_tokens"]
-    if t.shape[-1] < seg_len:
-        pad = seg_len - t.shape[-1]
-        for k in ("news_tokens", "news_freq"):
-            batch[k] = np.pad(batch[k], ((0, 0), (0, 0), (0, pad)))
-    return batch
-
-
 def train_speedyfeed(*, steps: int, ckpt_dir: str | None = None,
                      ckpt_every: int = 50, seed: int = 0, cfg=None,
                      fail_at: int | None = None, log_every: int = 20,
-                     async_ckpt: bool = True) -> TrainResult:
-    """The end-to-end driver. ``fail_at`` injects a crash (for restart tests)."""
-    t0 = time.time()
+                     async_ckpt: bool = True,
+                     prefetch_depth: int = 2) -> TrainResult:
+    """The end-to-end driver. ``fail_at`` injects a crash (restart tests)."""
     cfg = cfg or small_speedyfeed_config()
     corpus, log, store, lcfg = make_loader(cfg, seed=seed)
-    key = jax.random.PRNGKey(seed)
-    params, cache = core.speedyfeed_state(cfg, key)
-    opt = optim.adam_init(params)
-    start_step = 0
-    resumed = None
+    trainer = training.get_trainer("speedyfeed", cfg=cfg)
 
-    state_like = {"params": params, "opt": opt,
-                  "cache": {"emb": cache.emb, "age": cache.written_step}}
-    if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
-        start_step, tree = ckpt.restore(ckpt_dir, state_like)
-        params, opt = tree["params"], tree["opt"]
-        cache = core.CacheState(jnp.asarray(tree["cache"]["emb"]),
-                                jnp.asarray(tree["cache"]["age"]))
-        resumed = start_step
+    def make_batcher(epoch: int):
+        return data.DynamicBatcher(log, store, lcfg, n_threads=2,
+                                   seed=seed + 1_000_003 * epoch).start()
 
-    step_fn = jax.jit(make_sf_train_step(cfg))
-    batcher = data.DynamicBatcher(log, store, lcfg, n_threads=2,
-                                  seed=seed).start()
-    writer = ckpt.AsyncCheckpointer(ckpt_dir) if (ckpt_dir and async_ckpt) \
-        else None
-    monitor = StepTimeMonitor(n_hosts=1)
-    losses, metrics = [], {}
-    step = start_step
-    try:
-        while step < steps:
-            batch = batcher.get(timeout=10.0)
-            if batch is None:       # epoch exhausted: restart the loader
-                batcher.stop()
-                batcher = data.DynamicBatcher(log, store, lcfg, n_threads=2,
-                                              seed=seed + step + 1).start()
-                continue
-            batch.pop("_stats", None)
-            batch = pad_seg(batch, cfg.plm.seg_len)
-            batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            ts = time.time()
-            params, opt, cache, metrics = step_fn(
-                params, opt, cache, jnp.int32(step),
-                jax.random.fold_in(key, step), batch)
-            monitor.record(0, time.time() - ts)
-            losses.append(float(metrics["loss"]))
-            step += 1
-            if fail_at is not None and step >= fail_at:
-                raise RuntimeError("injected failure")
-            if ckpt_dir and step % ckpt_every == 0:
-                tree = {"params": params, "opt": opt,
-                        "cache": {"emb": cache.emb,
-                                  "age": cache.written_step}}
-                if writer:
-                    writer.save(step, tree)
-                else:
-                    ckpt.save(ckpt_dir, step, tree)
-            if log_every and step % log_every == 0:
-                print(f"step {step}: loss={losses[-1]:.4f} "
-                      f"acc={float(metrics.get('ar_acc', 0)):.3f} "
-                      f"reused={int(metrics.get('reused', 0))} "
-                      f"p_t={float(metrics.get('p_t', 0)):.2f}", flush=True)
-    finally:
-        batcher.stop()
-        if writer:
-            writer.wait()
-    return TrainResult(step, losses, resumed, time.time() - t0,
-                       {k: float(v) for k, v in metrics.items()
-                        if jnp.ndim(v) == 0})
+    return trainer.fit(make_batcher, steps=steps, seed=seed,
+                       ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                       async_ckpt=async_ckpt, log_every=log_every,
+                       fail_at=fail_at, prefetch_depth=prefetch_depth)
 
 
 def main():
@@ -157,8 +88,12 @@ def main():
     if args.arch == "speedyfeed":
         res = train_speedyfeed(steps=args.steps, ckpt_dir=args.ckpt_dir,
                                ckpt_every=args.ckpt_every, seed=args.seed)
+        loss = (f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}; "
+                if res.losses else "no new steps (already trained); ")
         print(f"done: {res.steps_done} steps in {res.wall_seconds:.1f}s; "
-              f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}"
+              + loss
+              + f"buckets {res.bucket_steps} compiles {res.compile_counts}; "
+              f"host stall {res.host_stall_fraction:.1%}"
               + (f" (resumed from {res.resumed_from})" if res.resumed_from
                  else ""))
     else:

@@ -1,0 +1,131 @@
+"""Async host->device input pipeline (double-buffered prefetch).
+
+The step thread must never block on the host: while bucket executable N runs,
+the next batch is already being assembled by the DynamicBatcher threads,
+converted, and `jax.device_put` by the prefetch thread. On TPU `device_put`
+enqueues an async H2D copy, so with ``depth=2`` the transfer of batch N+1
+overlaps the compute of batch N (classic double buffering); the bounded
+queue gives backpressure so at most ``depth`` batches are in flight.
+
+The prefetcher also owns epoch turnover: when the batcher reports
+``EPOCH_END`` (the explicit sentinel — a ``None`` from ``get`` is a timeout,
+not end-of-data) it tears the exhausted batcher down and starts the next
+epoch's, so the consumer sees one uninterrupted batch stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import jax
+
+from repro import data
+
+
+# producer finished cleanly (max_epochs reached, queue drained) — distinct
+# from None, which means timeout
+STREAM_END = data.batching.Sentinel("STREAM_END")
+
+
+@dataclasses.dataclass
+class PrefetchedBatch:
+    bucket: int          # seg-length bucket key (selects the executable)
+    arrays: dict         # device-resident batch tensors
+    stats: dict | None   # host-side loader stats (data efficiency etc.)
+    epoch: int = 0
+
+
+class DevicePrefetcher:
+    """Background thread: DynamicBatcher -> device arrays -> bounded queue.
+
+    ``make_batcher(epoch)`` must return a *started* DynamicBatcher; a fresh
+    one is created per epoch with the epoch index available for reseeding.
+    """
+
+    def __init__(self, make_batcher, *, depth: int = 2,
+                 max_epochs: int | None = None, device=None,
+                 poll: float = 0.25):
+        self._make = make_batcher
+        self._depth = depth
+        self._max_epochs = max_epochs
+        self._device = device
+        self._poll = poll
+        self._q = queue.Queue(maxsize=max(1, depth))
+        self._stop = threading.Event()
+        self._finished = threading.Event()
+        self._error: BaseException | None = None
+        self._thread: threading.Thread | None = None
+        self.epochs_done = 0
+
+    def start(self) -> "DevicePrefetcher":
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def _run(self):
+        epoch = 0
+        batcher = None
+        try:
+            batcher = self._make(epoch)
+            while not self._stop.is_set():
+                item = batcher.get(timeout=self._poll)
+                if item is None:               # timeout: loader still busy
+                    continue
+                if item is data.EPOCH_END:
+                    batcher.stop()
+                    batcher = None
+                    epoch += 1
+                    self.epochs_done = epoch
+                    if self._max_epochs is not None \
+                            and epoch >= self._max_epochs:
+                        return
+                    batcher = self._make(epoch)
+                    continue
+                stats = item.pop("_stats", None)
+                bucket = int(item.pop("_bucket",
+                                      (stats or {}).get("seg_len", 0)))
+                arrays = {k: jax.device_put(v, self._device)
+                          for k, v in item.items()}
+                pb = PrefetchedBatch(bucket, arrays, stats, epoch)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(pb, timeout=0.1)   # backpressure
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:      # surfaced on the consumer side
+            self._error = e
+        finally:
+            if batcher is not None:
+                batcher.stop()
+            self._finished.set()
+
+    def get(self, timeout: float = 30.0):
+        """Next device batch; ``STREAM_END`` once the producer finished
+        cleanly (max_epochs reached) and the queue drained; ``None`` only on
+        timeout (producer alive but slow). Raises the producer's error, if
+        any — the same three-way contract as ``DynamicBatcher.get``."""
+        end = time.monotonic() + timeout
+        while True:
+            if self._error is not None:
+                err, self._error = self._error, None
+                raise err
+            try:
+                return self._q.get(timeout=0.05)
+            except queue.Empty:
+                if self._finished.is_set() and self._q.empty():
+                    if self._error is not None:   # crash is not a clean end:
+                        continue                  # re-loop raises it
+                    return STREAM_END
+                if time.monotonic() >= end:
+                    return None
+
+    def stop(self):
+        """Shut the producer down. Never raises (safe in ``finally``);
+        producer errors surface through ``get``."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None

@@ -1,0 +1,76 @@
+"""TrainState — the single pytree the training runtime threads through
+jit'd step functions, donation, and checkpoints.
+
+Bundling params / opt / cache / step / rng into one NamedTuple is what makes
+buffer donation practical: the whole state is argument 0 of every bucket
+executable and is donated wholesale (`donate_argnums=(0,)`), so the
+optimizer update and the news-embedding cache refresh both happen in-place
+on device — the cache alone is O(n_news * news_dim) and would otherwise be
+copied every step.
+
+On-disk layout stays compatible with the pre-Trainer checkpoints:
+``{params, opt, cache: {emb, written_step}}`` plus new ``step`` / ``rng``
+leaves. Legacy checkpoints that named the cache timestamp ``age`` (and had
+no step/rng leaves) restore through the alias table below.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.core import CacheState
+
+# legacy (pre-Trainer) on-disk names, keyed by the current flattened key
+CKPT_ALIASES = {"cache::written_step": "cache::age"}
+# leaves absent from legacy checkpoints; restored states keep the init value
+CKPT_OPTIONAL = ("step", "rng")
+
+
+class TrainState(NamedTuple):
+    params: Any               # model parameter pytree
+    opt: Any                  # optimizer state (adam m/v/count)
+    cache: CacheState         # news-embedding cache (emb, written_step)
+    step: jax.Array           # int32 scalar, global step
+    rng: jax.Array            # base PRNG key; per-step key = fold_in(rng, step)
+
+
+def make_state(params, opt, cache, *, step: int = 0, rng=None) -> TrainState:
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return TrainState(params, opt, cache, jnp.int32(step), rng)
+
+
+def to_ckpt_tree(state: TrainState) -> dict:
+    """Flatten a TrainState into the on-disk checkpoint layout."""
+    return {"params": state.params, "opt": state.opt,
+            "cache": {"emb": state.cache.emb,
+                      "written_step": state.cache.written_step},
+            "step": state.step, "rng": state.rng}
+
+
+def from_ckpt_tree(tree: dict, step: int) -> TrainState:
+    cache = CacheState(jnp.asarray(tree["cache"]["emb"]),
+                       jnp.asarray(tree["cache"]["written_step"]))
+    # the directory step is authoritative (legacy ckpts have no step leaf)
+    return TrainState(tree["params"], tree["opt"], cache,
+                      jnp.int32(step), jnp.asarray(tree["rng"]))
+
+
+def save_state(ckpt_dir: str, step: int, state: TrainState, *,
+               writer: "ckpt.AsyncCheckpointer | None" = None, keep: int = 3):
+    tree = to_ckpt_tree(state)
+    if writer is not None:
+        writer.save(step, tree)
+    else:
+        ckpt.save(ckpt_dir, step, tree, keep=keep)
+
+
+def restore_state(ckpt_dir: str, like: TrainState,
+                  step: int | None = None) -> tuple[int, TrainState]:
+    """Restore a TrainState; accepts both the current layout and the legacy
+    ``{params, opt, cache: {emb, age}}`` layout (no step/rng leaves)."""
+    step, tree = ckpt.restore(ckpt_dir, to_ckpt_tree(like), step,
+                              aliases=CKPT_ALIASES, missing_ok=CKPT_OPTIONAL)
+    return step, from_ckpt_tree(tree, step)

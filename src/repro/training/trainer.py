@@ -1,0 +1,244 @@
+"""Trainer — bucket-aware donated step executables + async input pipeline.
+
+One `jax.jit`-wrapped state step with `donate_argnums=(0,)` serves every
+seg-length bucket: jit's shape-keyed cache gives each bucket its own warm
+executable, so a bucket-8 batch runs a bucket-8 program instead of being
+padded up to the global max (which silently threw away the loader's
+bucketing). Compilations are observed via a `jax.monitoring` hook and
+accounted per bucket — recompile hygiene is a tested invariant, not a hope.
+
+The step path never syncs: batches arrive device-resident from the
+DevicePrefetcher, metrics stay device scalars in a MetricsBuffer and are
+fetched in one transfer every `log_every` steps, and checkpoints snapshot
+to host only at the checkpoint cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.distributed.straggler import StepTimeMonitor
+
+from .prefetch import STREAM_END, DevicePrefetcher
+from .state import TrainState, restore_state, save_state
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_active_counters: list = []
+_listener_registered = False
+
+
+def _on_compile(event, duration_secs, **kw):
+    if event == _COMPILE_EVENT:
+        for c in list(_active_counters):
+            c.count += 1
+
+
+class CompileCounter:
+    """Counts XLA backend compilations while active (jax.monitoring hook).
+
+    The listener registers once per process (jax.monitoring has no
+    unregister) and fans out to the currently-active counters only.
+    """
+
+    def __init__(self):
+        self.count = 0
+
+    def __enter__(self):
+        global _listener_registered
+        if not _listener_registered:
+            jax.monitoring.register_event_duration_secs_listener(_on_compile)
+            _listener_registered = True
+        _active_counters.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        _active_counters.remove(self)
+        return False
+
+
+class MetricsBuffer:
+    """Accumulates per-step device metric dicts; fetches lazily in one
+    device_get per drain so the step loop never blocks on scalars.
+    ``max_pending`` bounds the live device-scalar backlog when the caller
+    never drains explicitly (e.g. ``log_every=0``)."""
+
+    def __init__(self, max_pending: int = 512):
+        self.max_pending = max_pending
+        self._pending = []
+        self.losses: list = []
+        self.last: dict = {}
+
+    def append(self, metrics: dict):
+        self._pending.append(metrics)
+        if len(self._pending) >= self.max_pending:
+            self.drain()
+
+    def drain(self) -> dict:
+        """Fetch everything accumulated since the last drain; returns the
+        most recent step's scalar metrics (host floats)."""
+        if self._pending:
+            host = jax.device_get(self._pending)
+            self._pending = []
+            self.losses.extend(float(m["loss"]) for m in host)
+            self.last = {k: float(v) for k, v in host[-1].items()
+                         if np.ndim(v) == 0}
+        return self.last
+
+
+@dataclasses.dataclass
+class TrainResult:
+    steps_done: int
+    losses: list
+    resumed_from: int | None
+    wall_seconds: float
+    metrics: dict
+    compile_counts: dict = dataclasses.field(default_factory=dict)
+    bucket_steps: dict = dataclasses.field(default_factory=dict)
+    host_stall_fraction: float = 0.0
+
+
+class Trainer:
+    """Owns the jit'd donated step function and the full fit loop.
+
+    ``make_step(cfg)`` must return the raw step
+    ``(params, opt, cache, step, rng, batch) -> (params, opt, cache,
+    metrics)``; ``init_fn(cfg, key) -> TrainState`` builds the initial
+    state. Both are supplied by the arch config (see
+    ``training.get_trainer``).
+    """
+
+    def __init__(self, cfg, *, make_step, init_fn, donate: bool = True):
+        self.cfg = cfg
+        self._raw_step = make_step(cfg)
+        self._init_fn = init_fn
+        self._step_jit = jax.jit(
+            self._state_step, donate_argnums=(0,) if donate else ())
+        self.compile_counts: dict = {}    # bucket -> backend compiles
+        self.bucket_steps: dict = {}      # bucket -> steps run
+        self.monitor: StepTimeMonitor | None = None   # set by fit()
+
+    # -- step ---------------------------------------------------------------
+
+    def _state_step(self, state: TrainState, batch):
+        rng = jax.random.fold_in(state.rng, state.step)
+        params, opt, cache, metrics = self._raw_step(
+            state.params, state.opt, state.cache, state.step, rng, batch)
+        new = TrainState(params, opt, cache, state.step + 1, state.rng)
+        return new, metrics
+
+    @property
+    def state_step(self):
+        """The unjitted ``(TrainState, batch) -> (TrainState, metrics)``
+        step — what the dry-run machinery lowers against abstract args."""
+        return self._state_step
+
+    def init_state(self, seed: int = 0) -> TrainState:
+        return self._init_fn(self.cfg, jax.random.PRNGKey(seed))
+
+    def step(self, state: TrainState, batch: dict, bucket=None):
+        """One donated train step. ``state`` is consumed (its buffers are
+        donated to the executable) — use only the returned state."""
+        if bucket is not None and bucket not in self.compile_counts:
+            with CompileCounter() as cc:
+                out = self._step_jit(state, batch)
+            self.compile_counts[bucket] = cc.count
+        else:
+            out = self._step_jit(state, batch)
+        if bucket is not None:
+            self.bucket_steps[bucket] = self.bucket_steps.get(bucket, 0) + 1
+        return out
+
+    def executable_count(self) -> int:
+        """Number of distinct compiled executables behind the step jit."""
+        return self._step_jit._cache_size()
+
+    # -- fit ----------------------------------------------------------------
+
+    def fit(self, make_batcher, *, steps: int, state: TrainState | None = None,
+            seed: int = 0, ckpt_dir: str | None = None, ckpt_every: int = 50,
+            async_ckpt: bool = True, log_every: int = 20,
+            fail_at: int | None = None, prefetch_depth: int = 2,
+            batch_timeout: float = 60.0) -> TrainResult:
+        """Train for ``steps`` total steps (resuming from the latest
+        checkpoint in ``ckpt_dir`` when one exists).
+
+        ``make_batcher(epoch)`` -> started DynamicBatcher; epochs roll over
+        inside the prefetcher. ``fail_at`` injects a crash after that many
+        total steps (restart tests).
+        """
+        t0 = time.time()
+        cc0, bs0 = dict(self.compile_counts), dict(self.bucket_steps)
+        state = state if state is not None else self.init_state(seed)
+        resumed = None
+        if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
+            resumed, state = restore_state(ckpt_dir, state)
+        step = int(state.step)
+
+        # a resumed run must not replay the pre-crash batch stream: offset
+        # the loader's epoch numbering (and thus its seeds) by the restored
+        # step, mirroring the pre-Trainer loop's reseed-on-restart
+        epoch0 = step if resumed is not None else 0
+        writer = ckpt.AsyncCheckpointer(ckpt_dir) \
+            if (ckpt_dir and async_ckpt) else None
+        prefetcher = DevicePrefetcher(lambda e: make_batcher(e + epoch0),
+                                      depth=prefetch_depth).start()
+        monitor = StepTimeMonitor(n_hosts=1)
+        buf = MetricsBuffer()
+        stall, de_sum, de_n = 0.0, 0.0, 0
+        drain_mark, drain_step = time.perf_counter(), step
+        try:
+            while step < steps:
+                tw = time.perf_counter()
+                pb = prefetcher.get(timeout=batch_timeout)
+                stall += time.perf_counter() - tw
+                if pb is STREAM_END:       # bounded-epoch source ran dry
+                    break
+                if pb is None:
+                    raise RuntimeError(
+                        f"no batch within {batch_timeout}s at step {step}")
+                state, metrics = self.step(state, pb.arrays, pb.bucket)
+                buf.append(metrics)
+                if pb.stats and "data_efficiency" in pb.stats:
+                    de_sum += float(pb.stats["data_efficiency"])
+                    de_n += 1
+                step += 1
+                if fail_at is not None and step >= fail_at:
+                    raise RuntimeError("injected failure")
+                if ckpt_dir and step % ckpt_every == 0:
+                    save_state(ckpt_dir, step, state, writer=writer)
+                if log_every and step % log_every == 0:
+                    m = buf.drain()
+                    # per-step dispatch time is meaningless on the async
+                    # path; feed the straggler EMA true wall/step at the
+                    # (blocking) drain cadence instead
+                    now = time.perf_counter()
+                    monitor.record(0, (now - drain_mark)
+                                   / max(step - drain_step, 1))
+                    drain_mark, drain_step = now, step
+                    print(f"step {step}: loss={m.get('loss', 0):.4f} "
+                          f"acc={m.get('ar_acc', 0):.3f} "
+                          f"reused={int(m.get('reused', 0))} "
+                          f"p_t={m.get('p_t', 0):.2f} "
+                          f"de={de_sum / max(de_n, 1):.2f} "
+                          f"[bucket {pb.bucket}]", flush=True)
+        finally:
+            prefetcher.stop()
+            if writer:
+                writer.wait()
+        self.monitor = monitor
+        final = buf.drain()
+        if de_n:      # loader-side Eq. 1 data efficiency (paper Figure 8)
+            final["loader_data_efficiency"] = de_sum / de_n
+        wall = time.time() - t0
+        # report THIS run's deltas (the Trainer's own counters are
+        # cumulative across its lifetime, e.g. warm-up + repeated fits)
+        compiles = {k: v - cc0.get(k, 0) for k, v in self.compile_counts
+                    .items() if v - cc0.get(k, 0) > 0}
+        bsteps = {k: v - bs0.get(k, 0) for k, v in self.bucket_steps.items()
+                  if v - bs0.get(k, 0) > 0}
+        return TrainResult(step, buf.losses, resumed, wall, final,
+                           compiles, bsteps, stall / max(wall, 1e-9))

@@ -75,11 +75,12 @@ def test_dynamic_batching_invariants(loader_setup):
     try:
         for _ in range(6):
             batch = b.get(timeout=5.0)
-            if batch is None:
+            if batch is None or batch is data.EPOCH_END:
                 break
             seen += 1
             st_ = batch.pop("_stats")
             assert st_["seg_len"] in cfg.buckets
+            assert batch.pop("_bucket") == st_["seg_len"]
             assert batch["news_tokens"].shape == (cfg.m_cap, 3,
                                                   st_["seg_len"])
             # inverse map stays within the merged set and hits real rows
