@@ -18,6 +18,9 @@ Layouts:
   codes  [Bc, N, M] int32 Bc == B (per-query candidate lists, IVF path)
                           or Bc == 1 (one shared corpus scan, flat-PQ path —
                           the block index_map broadcasts without copying)
+  valid  [Bv, N]    bool  optional slot validity (padded-CSR gathers carry
+                          unwritten tail slots; invalid scores come back
+                          -inf so a downstream top-k never selects them)
   out    [B, N]     f32
 
 Grid: (B, N / block_n); the LUT block stays resident across the inner
@@ -32,25 +35,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(lut_ref, codes_ref, o_ref, *, n_codes: int):
+def _block_scores(lut_ref, codes_ref, *, n_codes: int):
     lut = lut_ref[0].astype(jnp.float32)            # [M, K]
     codes = codes_ref[0]                            # [bn, M] int32
     bn, M = codes.shape
     iota = jax.lax.broadcasted_iota(jnp.int32, (bn, M, n_codes), 2)
     onehot = (iota == codes[:, :, None]).astype(jnp.float32)
     # gather+accumulate as one MXU contraction against the flattened LUT
-    scores = jax.lax.dot_general(
+    return jax.lax.dot_general(
         onehot.reshape(bn, M * n_codes), lut.reshape(M * n_codes),
         (((1,), (0,)), ((), ())))                   # [bn]
+
+
+def _kernel(lut_ref, codes_ref, o_ref, *, n_codes: int):
+    o_ref[0, :] = _block_scores(lut_ref, codes_ref,
+                                n_codes=n_codes).astype(o_ref.dtype)
+
+
+def _masked_kernel(lut_ref, codes_ref, valid_ref, o_ref, *, n_codes: int):
+    scores = _block_scores(lut_ref, codes_ref, n_codes=n_codes)
+    scores = jnp.where(valid_ref[0] != 0, scores, -jnp.inf)
     o_ref[0, :] = scores.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def pq_lut_scores(lut, codes, *, block_n: int = 128,
+def pq_lut_scores(lut, codes, valid=None, *, block_n: int = 128,
                   interpret: bool = True):
     """lut: [B, M, K] f32; codes: [Bc, N, M] int32 with Bc in {1, B}.
 
     Returns [B, N] f32: out[b, n] = sum_m lut[b, m, codes[min(b,Bc-1), n, m]].
+    With valid [Bv, N] (Bv in {1, B}), out[b, n] = -inf where not
+    valid[min(b,Bv-1), n] — the padded-CSR gather path scores fixed-width
+    candidate blocks whose tail slots hold no entry.
     """
     B, M, K = lut.shape
     Bc, N, Mc = codes.shape
@@ -60,19 +76,35 @@ def pq_lut_scores(lut, codes, *, block_n: int = 128,
     if pad:
         codes = jnp.pad(codes, ((0, 0), (0, pad), (0, 0)))
     Np = N + pad
-    shared = Bc == 1
-    kernel = functools.partial(_kernel, n_codes=K)
+    def _bcast(b_shared, *tail):
+        """Block index_map over (b, n), broadcasting b when shared; tail
+        pins any trailing block axes to 0."""
+        if b_shared:
+            return lambda b, n: (0, n, *tail)
+        return lambda b, n: (b, n, *tail)
+
+    in_specs = [
+        pl.BlockSpec((1, M, K), lambda b, n: (b, 0, 0)),
+        pl.BlockSpec((1, block_n, M), _bcast(Bc == 1, 0)),
+    ]
+    operands = [lut, codes]
+    if valid is None:
+        kernel = functools.partial(_kernel, n_codes=K)
+    else:
+        Bv, Nv = valid.shape
+        assert Nv == N and Bv in (1, B), (valid.shape, lut.shape)
+        valid = valid.astype(jnp.int32)
+        if pad:
+            valid = jnp.pad(valid, ((0, 0), (0, pad)))
+        in_specs.append(pl.BlockSpec((1, block_n), _bcast(Bv == 1)))
+        operands.append(valid)
+        kernel = functools.partial(_masked_kernel, n_codes=K)
     out = pl.pallas_call(
         kernel,
         grid=(B, Np // block_n),
-        in_specs=[
-            pl.BlockSpec((1, M, K), lambda b, n: (b, 0, 0)),
-            pl.BlockSpec((1, block_n, M),
-                         (lambda b, n: (0, n, 0)) if shared
-                         else (lambda b, n: (b, n, 0))),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_n), lambda b, n: (b, n)),
         out_shape=jax.ShapeDtypeStruct((B, Np), jnp.float32),
         interpret=interpret,
-    )(lut, codes)
+    )(*operands)
     return out[:, :N]

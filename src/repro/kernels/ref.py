@@ -50,13 +50,18 @@ def embedding_bag(table, idx, weights=None):
     return emb.sum(axis=-2)
 
 
-def pq_lut_scores(lut, codes):
+def pq_lut_scores(lut, codes, valid=None):
     """lut: [B, M, K]; codes: [Bc, N, M] (Bc in {1, B}) -> [B, N] f32.
 
-    out[b, n] = sum_m lut[b, m, codes[min(b, Bc-1), n, m]].
+    out[b, n] = sum_m lut[b, m, codes[min(b, Bc-1), n, m]]; with valid
+    [Bv, N] (Bv in {1, B}), invalid slots score -inf (padded-CSR gathers
+    carry unwritten tail slots that must never win a top-k).
     """
     gathered = jnp.take_along_axis(
         lut[:, None, :, :].astype(jnp.float32),          # [B, 1, M, K]
         codes[:, :, :, None],                            # [Bc, N, M, 1]
         axis=-1)                                         # [B, N, M, 1]
-    return gathered[..., 0].sum(axis=-1)
+    scores = gathered[..., 0].sum(axis=-1)
+    if valid is not None:
+        scores = jnp.where(valid, scores, -jnp.inf)
+    return scores

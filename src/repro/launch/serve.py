@@ -13,7 +13,8 @@ Architecture (paper §5.1.4 production setup, rebuilt on repro.serving):
      top-k.  Per-request latency includes time spent queued.
 
 Run: python -m repro.launch.serve --requests 64 --batch 16 \
-         [--index ivf-pq|ivf-flat|exact] [--nprobe 8] [--k-prime 64]
+         [--index ivf-pq|ivf-flat|exact] [--layout device|host]
+         [--nprobe 8] [--k-prime 64]
 """
 from __future__ import annotations
 
@@ -29,6 +30,14 @@ import numpy as np
 from repro import core, serving
 
 
+@jax.jit
+def _scatter_rows(mat, ids, rows):
+    """Row-scatter for publish: jitted so the update moves only the fresh
+    rows (eager .at[].set would also re-stage its scalar constants, which
+    the publish transfer-guard test forbids)."""
+    return mat.at[ids].set(rows)
+
+
 @dataclasses.dataclass
 class ServeStats:
     n_requests: int
@@ -38,6 +47,7 @@ class ServeStats:
     recall_ok: bool
     index_kind: str = "exact"
     ntotal: int = 0
+    layout: str = "device"
 
 
 class Recommender:
@@ -45,9 +55,10 @@ class Recommender:
 
     def __init__(self, cfg: core.SpeedyFeedConfig, params, store, *, k=10,
                  index_kind: str = "ivf-pq", nprobe: int = 8,
-                 k_prime: int | None = None):
+                 k_prime: int | None = None, layout: str = "device"):
         self.cfg, self.params, self.store, self.k = cfg, params, store, k
         self.index_kind = index_kind
+        self.layout = layout
         self.nprobe = nprobe
         self.k_prime = k_prime or max(4 * k, 32)
         self.service: serving.RetrievalService | None = None
@@ -89,7 +100,8 @@ class Recommender:
         index = serving.make_index(
             self.index_kind, emb.shape[1],
             ivf=serving.IVFConfig(nlist=nlist,
-                                  nprobe=min(self.nprobe, nlist)))
+                                  nprobe=min(self.nprobe, nlist)),
+            layout=self.layout)
         ids = np.arange(1, n)     # row 0 is the pad news: never a candidate
         index.train(jax.random.PRNGKey(seed), jnp.asarray(emb[1:]))
         index.add(ids, emb[1:])
@@ -102,8 +114,21 @@ class Recommender:
         """Fresh news straight into the serving path (delta tier)."""
         self.service.publish(ids, emb)
         # keep the user-encoding matrix in sync with the store: histories
-        # may reference the fresh ids (store grows for out-of-range ids)
-        self._emb = jnp.asarray(self.service.store_emb)
+        # may reference the fresh ids (store grows for out-of-range ids).
+        # Only the changed rows move host->device — re-uploading the whole
+        # [N, d] store per publish of a handful of ids was an H2D storm.
+        n, d = self.service.store_emb.shape
+        if self._emb.shape[0] < n:
+            self._emb = jnp.concatenate(
+                [self._emb, jnp.zeros((n - self._emb.shape[0], d),
+                                      self._emb.dtype)])
+        # dedup to the last write per id: scatter order for duplicate
+        # indices is undefined, while the numpy store is last-write-wins
+        ids = np.asarray(ids)
+        emb = np.asarray(emb, np.float32)
+        uniq, first_rev = np.unique(ids[::-1], return_index=True)
+        self._emb = _scatter_rows(self._emb, jax.device_put(uniq),
+                                  jax.device_put(emb[::-1][first_rev]))
 
     def recommend(self, hist_batch: np.ndarray, mask: np.ndarray):
         user = self._user(self._emb, jnp.asarray(hist_batch),
@@ -159,6 +184,9 @@ def main(argv=None):
                     choices=["exact", "ivf-flat", "ivf-pq"])
     ap.add_argument("--nprobe", type=int, default=8)
     ap.add_argument("--k-prime", type=int, default=64)
+    ap.add_argument("--layout", default="device", choices=["device", "host"],
+                    help="IVF list storage: padded-CSR device arrays with a "
+                         "jitted search, or the legacy ragged host lists")
     args = ap.parse_args(argv)
 
     from repro.launch.train import make_loader, small_speedyfeed_config
@@ -166,7 +194,8 @@ def main(argv=None):
     corpus, log, store, _ = make_loader(cfg)
     params, _ = core.speedyfeed_state(cfg)
     rec = Recommender(cfg, params, store, k=args.k, index_kind=args.index,
-                      nprobe=args.nprobe, k_prime=args.k_prime)
+                      nprobe=args.nprobe, k_prime=args.k_prime,
+                      layout=args.layout)
     t0 = time.time()
     rec.build_index()
     print(f"index built: {store.tokens.shape[0]} news "
@@ -184,7 +213,8 @@ def main(argv=None):
                                     and (r != serving.PAD_ID).all()
                                     for r in results),
                       index_kind=args.index,
-                      ntotal=rec.service.index.ntotal)
+                      ntotal=rec.service.index.ntotal,
+                      layout=args.layout)
 
 
 if __name__ == "__main__":

@@ -1,23 +1,34 @@
 """ANN indexes over news embeddings: exact-flat fallback, IVF-Flat, IVF-PQ.
 
-Replaces the paper's HNSW (§5.1.4) with the TPU-native family: a k-means
-coarse quantizer (IVF) partitions the corpus into nlist cells; a query
-probes the nprobe nearest cells and scores only their members, either in
-full precision (IVF-Flat) or through residual product-quantization codes
+Replaces the paper's HNSW (§5.1.4) with the TPU-native family: a spherical
+k-means coarse quantizer (IVF) partitions the corpus into nlist cells on
+the unit sphere — assignment and probing share that one metric (the old
+raw-L2 partition probed by inner product ranked cells by a metric that
+never built them); a query probes the nprobe nearest cells and scores
+only their members, either in full precision (IVF-Flat) or through
+residual product-quantization codes around the raw-space cell means
 (IVF-PQ, scored with the Pallas LUT kernel).  All indexes share one API:
 
     idx.train(key, vectors)          # fit quantizers (no-op for Flat)
     idx.add(ids, vectors)            # incremental — used by online deltas
     idx.search(queries, k) -> (scores [B, k], ids [B, k])   np.float32/int64
 
-Host/device split: membership lists are ragged so they live in host numpy;
-candidate gathers pad to a static width and all scoring (einsum / LUT
-kernel / top-k) runs as jitted device code — the pragmatic CPU-scale
-stand-in for a fully device-resident padded-CSR layout.
+Host/device split: membership lists are device-resident padded CSR —
+fixed-capacity ``[nlist, cap]`` id/payload arrays plus per-list lengths,
+where ``cap`` grows in power-of-two buckets (MIN_CAP, doubling on
+overflow).  ``add``/``remove`` are device scatters/compactions, and the
+whole query path — cell probe, candidate gather, scoring (einsum for
+IVF-Flat; coarse term + Pallas LUT for IVF-PQ) and masked top-k — is ONE
+jitted executable per (index kind, cap bucket): searches across batches
+with any fill level reuse the warm executable, and a cap growth costs
+exactly one fresh compilation for the new bucket.  ``layout="host"``
+keeps the legacy ragged host-numpy lists (per-query Python gather,
+per-candidate-width recompiles) for one PR as the benchmark baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +37,12 @@ import numpy as np
 from .pq import PQCodebook, PQConfig, kmeans, pq_encode, pq_lut, pq_train
 
 PAD_ID = -1
+MIN_CAP = 8            # smallest per-list capacity bucket
+
+
+def _next_cap(n: int) -> int:
+    """Smallest power-of-two capacity bucket holding n entries per list."""
+    return max(MIN_CAP, 1 << max(int(n) - 1, 0).bit_length())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +50,12 @@ class IVFConfig:
     nlist: int = 32        # coarse cells
     nprobe: int = 8        # cells scanned per query
     train_iters: int = 15
+    metric: str = "l2"     # cell-probe metric: "l2" ranks cells on the unit
+    #                        sphere — the same metric the spherical k-means
+    #                        partition was built with; "ip" is the legacy
+    #                        mismatched ranking (raw inner product against
+    #                        the unnormalized cell means), kept for the
+    #                        recall regression test and benchmark
 
 
 def _topk_padded(scores, cand_ids, k):
@@ -58,6 +81,135 @@ def _topk_padded(scores, cand_ids, k):
 def _dot_scores(q, vecs):
     return jnp.einsum("bd,bcd->bc", q, vecs)
 
+
+# ---------------------------------------------------------------------------
+# padded-CSR device primitives
+# ---------------------------------------------------------------------------
+
+def _normalize(x, eps: float = 1e-9):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def _probe_cells(q, cent_unit, cent_raw, nprobe: int, metric: str):
+    """Top-nprobe coarse cells per query -> [B, nprobe] int32.
+
+    "l2" ranks cells by the metric that built the spherical partition:
+    with unit centroids, argmin ||q_hat - c||^2 == argmax <q, c> (the
+    query's own norm is constant per row), so one matmul suffices.  "ip"
+    is the legacy mismatched ranking — raw inner product against the
+    unnormalized cell means, which biases probing toward loud/coherent
+    cells regardless of direction match.
+    """
+    if metric == "l2":
+        aff = q @ cent_unit.T
+    elif metric == "ip":
+        aff = q @ cent_raw.T
+    else:
+        raise ValueError(f"unknown probe metric: {metric!r}")
+    return jax.lax.top_k(aff, nprobe)[1]
+
+
+def _masked_topk(scores, cand_ids, valid, k: int):
+    """Device top-k over fixed-width candidates; invalid slots -> PAD_ID."""
+    scores = jnp.where(valid, scores, -jnp.inf)
+    s, pos = jax.lax.top_k(scores, k)
+    ids = jnp.take_along_axis(cand_ids, pos, axis=1)
+    return s, jnp.where(jnp.isfinite(s), ids, PAD_ID)
+
+
+def _gather_candidates(q, cent_unit, cent_raw, list_ids, lens, *,
+                       nprobe: int, metric: str):
+    """Probe cells, then gather the fixed-width candidate window: probed
+    cell indices [B, P], candidate ids [B, P*cap], and the slot-validity
+    mask from the per-list lengths.  Shared by both search kernels so the
+    probe/validity semantics cannot diverge between them."""
+    B, cap = q.shape[0], list_ids.shape[1]
+    probes = _probe_cells(q, cent_unit, cent_raw, nprobe, metric)  # [B, P]
+    cand_ids = list_ids[probes].reshape(B, -1)                # [B, P*cap]
+    valid = (jnp.arange(cap)[None, None]
+             < lens[probes][:, :, None]).reshape(B, -1)
+    return probes, cand_ids, valid
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric"))
+def _search_flat_csr(q, cent_unit, cent_raw, list_ids, list_vecs, lens, *,
+                     nprobe: int, k: int, metric: str):
+    """Jitted IVF-Flat search over padded-CSR storage.
+
+    q [B, d]; cent_unit/cent_raw [nlist, d]; list_ids [nlist, cap] int32;
+    list_vecs [nlist, cap, d]; lens [nlist] int32.  Shapes are static per
+    cap bucket, so every fill level hits the same warm executable.
+    """
+    B, cap = q.shape[0], list_ids.shape[1]
+    nlist = list_ids.shape[0]
+    probes, cand_ids, valid = _gather_candidates(
+        q, cent_unit, cent_raw, list_ids, lens, nprobe=nprobe, metric=metric)
+    if nlist <= 4 * B * nprobe:
+        # dense coverage (micro-batch serving: B*nprobe probes over few
+        # cells): score every cell once in one MXU/BLAS matmul and gather
+        # only the probed [B, P, cap] score blocks — far cheaper than
+        # duplicating cell payloads per query through a vector gather
+        all_s = jnp.einsum("bd,lcd->blc", q, list_vecs)     # [B, nlist, cap]
+        scores = jnp.take_along_axis(all_s, probes[:, :, None], axis=1)
+    else:
+        # sparse coverage (nlist >> B*nprobe): gather only probed payloads
+        scores = jnp.einsum("bd,bpcd->bpc", q, list_vecs[probes])
+    return _masked_topk(scores.reshape(B, -1), cand_ids, valid, k)
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric"))
+def _search_pq_csr(q, cent_unit, cent_raw, list_ids, list_codes, lens,
+                   cb_centers, *, nprobe: int, k: int, metric: str):
+    """Jitted IVF-PQ search: coarse term + masked Pallas LUT over the
+    gathered [B, nprobe*cap, M] padded-CSR codes."""
+    from repro.kernels import ops
+    B, cap = q.shape[0], list_ids.shape[1]
+    probes, cand_ids, valid = _gather_candidates(
+        q, cent_unit, cent_raw, list_ids, lens, nprobe=nprobe, metric=metric)
+    lut = pq_lut(PQCodebook(cb_centers), q)                   # [B, M, K]
+    codes = list_codes[probes].reshape(B, -1, list_codes.shape[-1])
+    # wide blocks: the LUT contraction runs best as few big one-hot
+    # matmuls (and in interpret mode each grid step is an unrolled op)
+    block_n = min(1024, nprobe * cap)
+    adc = ops.pq_lut_scores(lut, codes, valid, block_n=block_n)  # [B, P*cap]
+    coarse = jnp.take_along_axis(q @ cent_raw.T, probes, axis=1)
+    scores = adc + jnp.repeat(coarse, cap, axis=1)
+    return _masked_topk(scores, cand_ids, valid, k)
+
+
+def _csr_append(list_ids, payload, lens, assign, new_ids, new_payload):
+    """Scatter n new rows into their lists' next free slots (device ops).
+
+    Each new row i lands at slot lens[assign[i]] + (rank of i among the
+    new rows assigned to the same list); ranks come from a stable sort.
+    """
+    order = jnp.argsort(assign, stable=True)
+    a = assign[order]
+    rank = jnp.arange(a.shape[0]) - jnp.searchsorted(a, a)
+    slot = lens[a] + rank
+    list_ids = list_ids.at[a, slot].set(new_ids[order])
+    payload = payload.at[a, slot].set(new_payload[order])
+    lens = lens + jnp.bincount(assign, length=lens.shape[0]).astype(lens.dtype)
+    return list_ids, payload, lens
+
+
+def _csr_remove(list_ids, payload, lens, drop_ids):
+    """Drop matching ids and re-pack every list front-aligned (device ops)."""
+    cap = list_ids.shape[1]
+    slot = jnp.arange(cap)[None]
+    keep = (slot < lens[:, None]) & ~jnp.isin(list_ids, drop_ids)
+    perm = jnp.argsort(~keep, axis=1, stable=True)   # kept slots to the front
+    list_ids = jnp.take_along_axis(list_ids, perm, axis=1)
+    payload = jnp.take_along_axis(
+        payload, perm.reshape(perm.shape + (1,) * (payload.ndim - 2)), axis=1)
+    lens = keep.sum(axis=1).astype(lens.dtype)
+    list_ids = jnp.where(slot < lens[:, None], list_ids, PAD_ID)
+    return list_ids, payload, lens
+
+
+# ---------------------------------------------------------------------------
+# indexes
+# ---------------------------------------------------------------------------
 
 class FlatIndex:
     """Exact MIPS over the full corpus — the fallback and recall oracle."""
@@ -94,85 +246,193 @@ class FlatIndex:
 
 
 class IVFFlatIndex:
-    """IVF coarse quantizer + full-precision scoring of probed cells."""
+    """IVF coarse quantizer + full-precision scoring of probed cells.
 
-    def __init__(self, dim: int, cfg: IVFConfig = IVFConfig()):
-        self.dim, self.cfg = dim, cfg
-        self.centroids = None                  # [nlist, d] np
-        self._list_ids = [np.zeros((0,), np.int64)
-                          for _ in range(cfg.nlist)]
-        self._list_payload = [self._empty_payload()
+    layout="device" (default): padded-CSR storage, jitted end-to-end
+    search (one executable per cap bucket).  layout="host": the legacy
+    ragged numpy lists with a per-query Python gather — kept one PR as
+    the benchmark baseline and the property-test oracle.
+    """
+
+    def __init__(self, dim: int, cfg: IVFConfig = IVFConfig(), *,
+                 layout: str = "device"):
+        if layout not in ("device", "host"):
+            raise ValueError(f"unknown layout: {layout!r}")
+        self.dim, self.cfg, self.layout = dim, cfg, layout
+        self.centroids = None                  # [nlist, d] np, unit norm
+        self.centroids_raw = None              # [nlist, d] np, raw cell means
+        self._cent_dev = None                  # unit centroids, device
+        self._cent_raw_dev = None              # raw cell means, device
+        if layout == "host":
+            self._list_ids = [np.zeros((0,), np.int64)
                               for _ in range(cfg.nlist)]
+            self._list_payload = [self._empty_payload_host()
+                                  for _ in range(cfg.nlist)]
+        else:
+            self._cap = MIN_CAP
+            self._ids_dev = jnp.full((cfg.nlist, MIN_CAP), PAD_ID, jnp.int32)
+            self._payload_dev = self._empty_payload_dev(MIN_CAP)
+            self._lens = jnp.zeros((cfg.nlist,), jnp.int32)
 
     # --- storage hooks (overridden by IVFPQIndex) ---------------------
-    def _empty_payload(self):
+    def _empty_payload_host(self):
         return np.zeros((0, self.dim), np.float32)
 
-    def _encode_payload(self, vectors, assign):   # noqa: ARG002
-        return np.asarray(vectors, np.float32)
+    def _empty_payload_dev(self, cap: int):
+        return jnp.zeros((self.cfg.nlist, cap, self.dim), jnp.float32)
+
+    def _encode_payload_dev(self, vectors, assign):   # noqa: ARG002
+        return vectors
 
     def _score_candidates(self, queries, payload, cand_lists):
-        """queries [B, d]; payload [B, C, ...]; cand_lists [B, C]."""
+        """Host layout: queries [B, d]; payload [B, C, ...]; cand_lists
+        [B, C].  Recompiles per candidate width C — the documented cost
+        of the legacy layout."""
         del cand_lists
         return _dot_scores(jnp.asarray(queries, jnp.float32),
                            jnp.asarray(payload))
 
+    def _search_csr(self, q, nprobe: int, k: int):
+        return _search_flat_csr(q, self._cent_dev, self._cent_raw_dev,
+                                self._ids_dev, self._payload_dev, self._lens,
+                                nprobe=nprobe, k=k, metric=self.cfg.metric)
+
     # ------------------------------------------------------------------
     @property
     def ntotal(self) -> int:
-        return sum(x.shape[0] for x in self._list_ids)
+        if self.layout == "host":
+            return sum(x.shape[0] for x in self._list_ids)
+        return int(jnp.sum(self._lens))
+
+    @property
+    def cap(self) -> int:
+        """Current power-of-two per-list capacity bucket (device layout)."""
+        return self._cap
 
     @property
     def is_trained(self) -> bool:
         return self.centroids is not None
 
     def train(self, key, vectors):
+        """Spherical k-means: the partition lives on the unit sphere, and
+        assignment and probing share that one metric (the old raw-L2
+        partition probed by inner product ranked cells by a metric that
+        never built them).  Raw-space cell means are kept alongside: they
+        are the PQ residual origin / coarse score term and the legacy
+        "ip" probe ranking."""
         vectors = jnp.asarray(vectors, jnp.float32)
-        cent, _ = kmeans(key, vectors, self.cfg.nlist, self.cfg.train_iters)
-        self.centroids = np.asarray(cent)
-        self._post_train(key, vectors)
+        cent, _ = kmeans(key, _normalize(vectors), self.cfg.nlist,
+                         self.cfg.train_iters)
+        self._cent_dev = _normalize(cent)
+        assign = self._assign_cells(vectors)
+        onehot = jax.nn.one_hot(assign, self.cfg.nlist, dtype=vectors.dtype)
+        counts = onehot.sum(0)                              # [nlist]
+        means = onehot.T @ vectors / jnp.maximum(counts, 1.0)[:, None]
+        self._cent_raw_dev = jnp.where(counts[:, None] > 0, means,
+                                       self._cent_dev)
+        self.centroids = np.asarray(self._cent_dev)
+        self.centroids_raw = np.asarray(self._cent_raw_dev)
+        self._post_train(key, vectors, assign)
         return self
 
-    def _post_train(self, key, vectors):
+    def _post_train(self, key, vectors, assign):
         pass
 
-    def _assign(self, vectors):
-        d2 = (np.sum(vectors * vectors, 1)[:, None]
-              - 2.0 * vectors @ self.centroids.T
-              + np.sum(self.centroids * self.centroids, 1)[None])
-        return np.argmin(d2, axis=1)
+    def _assign_cells(self, vectors):
+        """Nearest cell on the unit sphere -> [n] int32.  With unit
+        centroids, argmin ||v_hat - c||^2 == argmax <v, c> (each row's
+        norm is a per-row constant), so assignment is one matmul.
+        Shared by both layouts so they build identical lists."""
+        return jnp.argmax(vectors @ self._cent_dev.T, axis=1).astype(
+            jnp.int32)
+
+    def _grow(self, new_cap: int):
+        pad = new_cap - self._cap
+        self._ids_dev = jnp.pad(self._ids_dev, ((0, 0), (0, pad)),
+                                constant_values=PAD_ID)
+        spec = ((0, 0), (0, pad)) + ((0, 0),) * (self._payload_dev.ndim - 2)
+        self._payload_dev = jnp.pad(self._payload_dev, spec)
+        self._cap = new_cap
 
     def remove(self, ids):
+        ids = self._check_ids(ids)
+        if ids.size == 0:
+            return
+        if self.layout == "host":
+            for l in range(self.cfg.nlist):
+                keep = ~np.isin(self._list_ids[l], ids)
+                if not keep.all():
+                    self._list_ids[l] = self._list_ids[l][keep]
+                    self._list_payload[l] = self._list_payload[l][keep]
+            return
+        self._ids_dev, self._payload_dev, self._lens = _csr_remove(
+            self._ids_dev, self._payload_dev, self._lens,
+            jnp.asarray(ids, jnp.int32))
+
+    def _check_ids(self, ids):
+        """Device lists store ids as int32; reject ids that would wrap
+        (silent truncation would corrupt search results and could even
+        collide with PAD_ID)."""
         ids = np.asarray(ids, np.int64)
-        for l in range(self.cfg.nlist):
-            keep = ~np.isin(self._list_ids[l], ids)
-            if not keep.all():
-                self._list_ids[l] = self._list_ids[l][keep]
-                self._list_payload[l] = self._list_payload[l][keep]
+        if self.layout == "device" and ids.size and (
+                ids.max() >= 2 ** 31 or ids.min() < 0):
+            raise ValueError("device layout requires ids in [0, 2**31)")
+        return ids
 
     def add(self, ids, vectors):
         """Upsert: a re-added id replaces its previous (stale) entry."""
         assert self.is_trained, "train() before add()"
-        ids = np.asarray(ids, np.int64)
-        vectors = np.asarray(vectors, np.float32)
+        ids = self._check_ids(ids)
         self.remove(ids)
-        assign = self._assign(vectors)
-        payload = self._encode_payload(vectors, assign)
-        for l in np.unique(assign):
-            sel = assign == l
-            self._list_ids[l] = np.concatenate([self._list_ids[l], ids[sel]])
-            self._list_payload[l] = np.concatenate(
-                [self._list_payload[l], payload[sel]])
-
-    def _probe(self, queries):
-        """Top-nprobe cells per query by inner product with the centroids."""
-        sims = np.asarray(queries, np.float32) @ self.centroids.T
-        nprobe = min(self.cfg.nprobe, self.cfg.nlist)
-        return np.argsort(-sims, axis=1)[:, :nprobe]       # [B, nprobe]
+        vecs = jnp.asarray(vectors, jnp.float32)
+        assign = self._assign_cells(vecs)
+        if self.layout == "host":
+            assign_h = np.asarray(assign)
+            payload = np.asarray(self._encode_payload_dev(vecs, assign))
+            for l in np.unique(assign_h):
+                sel = assign_h == l
+                self._list_ids[l] = np.concatenate(
+                    [self._list_ids[l], ids[sel]])
+                self._list_payload[l] = np.concatenate(
+                    [self._list_payload[l], payload[sel]])
+            return
+        counts = np.bincount(np.asarray(assign), minlength=self.cfg.nlist)
+        needed = int((np.asarray(self._lens) + counts).max())
+        if needed > self._cap:
+            self._grow(_next_cap(needed))
+        payload = self._encode_payload_dev(vecs, assign)
+        self._ids_dev, self._payload_dev, self._lens = _csr_append(
+            self._ids_dev, self._payload_dev, self._lens, assign,
+            jnp.asarray(ids, jnp.int32), payload)
 
     def search(self, queries, k: int):
+        if self.layout == "host":
+            return self._search_host(queries, k)
+        q = jnp.asarray(queries, jnp.float32)
+        nprobe = min(self.cfg.nprobe, self.cfg.nlist)
+        k_eff = min(k, nprobe * self._cap)
+        s, ids = self._search_csr(q, nprobe, k_eff)
+        s, ids = np.asarray(s, np.float32), np.asarray(ids, np.int64)
+        if k_eff < k:
+            s = np.pad(s, ((0, 0), (0, k - k_eff)), constant_values=-np.inf)
+            ids = np.pad(ids, ((0, 0), (0, k - k_eff)),
+                         constant_values=PAD_ID)
+        return s, ids
+
+    # --- legacy host layout ------------------------------------------
+    def _probe_host(self, queries):
+        """Top-nprobe cells per query by cfg.metric (host numpy)."""
+        if self.cfg.metric not in ("l2", "ip"):       # match the device path
+            raise ValueError(f"unknown probe metric: {self.cfg.metric!r}")
+        cent = (self.centroids if self.cfg.metric == "l2"
+                else self.centroids_raw)
+        aff = np.asarray(queries, np.float32) @ cent.T
+        nprobe = min(self.cfg.nprobe, self.cfg.nlist)
+        return np.argsort(-aff, axis=1)[:, :nprobe]        # [B, nprobe]
+
+    def _search_host(self, queries, k: int):
         queries = np.asarray(queries, np.float32)
-        probes = self._probe(queries)                      # [B, nprobe]
+        probes = self._probe_host(queries)                 # [B, nprobe]
         B = queries.shape[0]
         per_q_ids, per_q_payload, per_q_lists = [], [], []
         for b in range(B):
@@ -208,41 +468,51 @@ class IVFPQIndex(IVFFlatIndex):
     """
 
     def __init__(self, dim: int, cfg: IVFConfig = IVFConfig(),
-                 pq_cfg: PQConfig = PQConfig()):
+                 pq_cfg: PQConfig = PQConfig(), *, layout: str = "device"):
         self.pq_cfg = pq_cfg
         self.codebook: PQCodebook | None = None
-        super().__init__(dim, cfg)
+        super().__init__(dim, cfg, layout=layout)
 
-    def _empty_payload(self):
+    def _empty_payload_host(self):
         return np.zeros((0, self.pq_cfg.n_subvec), np.int32)
 
-    def _post_train(self, key, vectors):
-        assign = self._assign(np.asarray(vectors))
-        residuals = np.asarray(vectors) - self.centroids[assign]
-        self.codebook = pq_train(jax.random.fold_in(key, 1),
-                                 jnp.asarray(residuals), self.pq_cfg)
+    def _empty_payload_dev(self, cap: int):
+        return jnp.zeros((self.cfg.nlist, cap, self.pq_cfg.n_subvec),
+                         jnp.int32)
 
-    def _encode_payload(self, vectors, assign):
-        residuals = vectors - self.centroids[assign]
-        return np.asarray(pq_encode(self.codebook, jnp.asarray(residuals)))
+    def _post_train(self, key, vectors, assign):
+        residuals = vectors - self._cent_raw_dev[assign]
+        self.codebook = pq_train(jax.random.fold_in(key, 1), residuals,
+                                 self.pq_cfg)
+
+    def _encode_payload_dev(self, vectors, assign):
+        residuals = vectors - self._cent_raw_dev[assign]
+        return pq_encode(self.codebook, residuals)
+
+    def _search_csr(self, q, nprobe: int, k: int):
+        return _search_pq_csr(q, self._cent_dev, self._cent_raw_dev,
+                              self._ids_dev, self._payload_dev, self._lens,
+                              self.codebook.centers,
+                              nprobe=nprobe, k=k, metric=self.cfg.metric)
 
     def _score_candidates(self, queries, payload, cand_lists):
         from repro.kernels import ops
         q = jnp.asarray(queries, jnp.float32)
         lut = pq_lut(self.codebook, q)                     # [B, M, K]
         adc = ops.pq_lut_scores(lut, jnp.asarray(payload))  # [B, C]
-        coarse = q @ jnp.asarray(self.centroids).T          # [B, nlist]
+        coarse = q @ jnp.asarray(self.centroids_raw).T      # [B, nlist]
         return adc + jnp.take_along_axis(coarse, jnp.asarray(cand_lists),
                                          axis=1)
 
 
 def make_index(kind: str, dim: int, *, ivf: IVFConfig = IVFConfig(),
-               pq: PQConfig = PQConfig()):
-    """Factory: 'exact' | 'ivf-flat' | 'ivf-pq'."""
+               pq: PQConfig = PQConfig(), layout: str = "device"):
+    """Factory: 'exact' | 'ivf-flat' | 'ivf-pq'; layout 'device' | 'host'
+    (padded-CSR jitted search vs the legacy ragged-numpy baseline)."""
     if kind == "exact":
         return FlatIndex(dim)
     if kind == "ivf-flat":
-        return IVFFlatIndex(dim, ivf)
+        return IVFFlatIndex(dim, ivf, layout=layout)
     if kind == "ivf-pq":
-        return IVFPQIndex(dim, ivf, pq)
+        return IVFPQIndex(dim, ivf, pq, layout=layout)
     raise ValueError(f"unknown index kind: {kind!r}")

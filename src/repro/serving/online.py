@@ -82,10 +82,23 @@ def hybrid_search(index, delta: DeltaBuffer | None, queries, k: int):
     embedding wins), so a query through (index, delta) equals the query
     after ``delta.compact_into(index)`` whenever the index scan is
     exhaustive over the compacted ids.
+
+    The main tier is over-fetched by len(delta): every one of its hits
+    that also lives in the delta tier is nulled as stale, so k fresh
+    survivors need up to k + len(delta) main results.  Fetching only k
+    silently dropped fresh main ids that stale entries had pushed out of
+    the window (and an over-fetch of min(len(delta), k) still would: all
+    len(delta) stale ids can out-rank the k-th fresh one).  len(delta)
+    is bounded by the compaction threshold, so the over-fetch is too.
+    The fetch width is rounded up to the next power of two: k is a static
+    shape of the device index's jitted search, and a width that moved
+    with every publish would recompile it per delta size.
     """
-    s_main, i_main = index.search(queries, k)
     if delta is None or len(delta) == 0:
-        return s_main, i_main
+        return index.search(queries, k)
+    k_main = k + len(delta)
+    k_main = 1 << (k_main - 1).bit_length()          # pow2: stable jit key
+    s_main, i_main = index.search(queries, k_main)
     s_d, i_d = delta.search(queries, k)
     # a main-index hit whose id also lives in the delta tier is stale —
     # the delta (freshest) embedding's score replaces it

@@ -9,7 +9,10 @@ true top-k item out of the top-k' — recall@k' is the only knob.
 
 The service owns the full-precision store (global-id -> embedding), the
 main ANN index and the online delta tier; ``publish`` is the single
-entry point for fresh news and triggers threshold compaction.
+entry point for fresh news and triggers threshold compaction.  With the
+default device index layout, stage 1 runs as one jitted padded-CSR
+search per (index kind, cap bucket) — the host work per query() is the
+hybrid merge and the candidate-row gather for stage 2.
 """
 from __future__ import annotations
 
@@ -46,6 +49,12 @@ class RetrievalService:
         tier, compact into the main index past the threshold."""
         ids = np.asarray(ids, np.int64)
         emb = np.asarray(emb, np.float32)
+        if ids.size and (ids.min() < 0 or ids.max() >= 2 ** 31):
+            # reject at the entry point: negative ids would silently write
+            # the wrong store row, and ids >= 2**31 would be accepted here
+            # only to wedge every later compaction into the device index
+            # (whose lists store int32 ids)
+            raise ValueError("publish ids must be in [0, 2**31)")
         if ids.max(initial=-1) >= self.store_emb.shape[0]:
             grow = int(ids.max()) + 1 - self.store_emb.shape[0]
             self.store_emb = np.concatenate(

@@ -1,9 +1,15 @@
 """Serving subsystem: PQ reconstruction, IVF recall vs exact MIPS, online
-delta/compaction equivalence, and Pallas LUT-kernel parity (interpret)."""
+delta/compaction equivalence, Pallas LUT-kernel parity (interpret), and
+the padded-CSR device layout (parity with the legacy host layout across
+add/remove/upsert/compact sequences, compile hygiene per cap bucket,
+probe-metric recall regression, hybrid over-fetch contract)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro import serving
 from repro.kernels import ref
@@ -212,3 +218,329 @@ def test_service_publish_compacts_past_threshold(corpus):
     assert len(svc.delta) == 0 and idx.ntotal == 2000
     _, got = svc.query(q)
     assert (got != serving.PAD_ID).all()
+
+
+# ----------------------------------------------------- masked LUT kernel
+@pytest.mark.parametrize("shared_v", [False, True])
+def test_pq_kernel_masked_matches_xla_reference(shared_v):
+    """The padded-CSR gather path: invalid slots must score -inf."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(42), 3)
+    B, M, K, N = 3, 8, 32, 200
+    lut = jax.random.normal(k1, (B, M, K))
+    codes = jax.random.randint(k2, (B, N, M), 0, K)
+    valid = jax.random.bernoulli(k3, 0.7, (1 if shared_v else B, N))
+    out = np.asarray(pq_raw(lut, codes, valid, block_n=64, interpret=True))
+    exp = np.asarray(ref.pq_lut_scores(lut, codes, valid))
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+    invalid = np.broadcast_to(~np.asarray(valid), (B, N))
+    assert np.isneginf(out[invalid]).all()
+    assert np.isfinite(out[~invalid]).all()
+
+
+# ------------------------------------------- padded-CSR vs host layout
+def _build_pair(kind, x, seed=0):
+    """Device- and host-layout twins trained on the same data/key (the
+    spherical partition and PQ codebook come out identical)."""
+    cfg = serving.IVFConfig(nlist=8, nprobe=4)
+    pq_cfg = serving.PQConfig(n_subvec=4, n_codes=16)
+    pair = []
+    for layout in ("device", "host"):
+        idx = serving.make_index(kind, x.shape[1], ivf=cfg, pq=pq_cfg,
+                                 layout=layout)
+        idx.train(jax.random.PRNGKey(seed), jnp.asarray(x))
+        pair.append(idx)
+    return pair
+
+
+def _apply_ops(idx, ops, x, ids):
+    """Replay an add/remove/upsert/compact sequence onto one index."""
+    n = x.shape[0]
+    for op, start, length in ops:
+        lo, hi = start % n, min(start % n + length, n)
+        sel = slice(lo, hi)
+        if op == "add":
+            idx.add(ids[sel], x[sel])
+        elif op == "remove":
+            idx.remove(ids[sel])
+        elif op == "upsert":                 # re-add with changed vectors
+            idx.add(ids[sel], x[sel] + 0.25)
+        elif op == "compact":                # delta tier -> bulk device add
+            delta = serving.DeltaBuffer(x.shape[1],
+                                        compact_threshold=10 ** 9)
+            delta.add(ids[sel], x[sel])
+            delta.compact_into(idx)
+
+
+def _assert_search_parity(dev, host, q, k, tol):
+    s_d, i_d = dev.search(q, k)
+    s_h, i_h = host.search(q, k)
+    assert dev.ntotal == host.ntotal
+    np.testing.assert_allclose(-np.sort(-s_d, axis=1),
+                               -np.sort(-s_h, axis=1), rtol=tol, atol=tol)
+    for b in range(q.shape[0]):
+        assert set(i_d[b]) == set(i_h[b]), (b, i_d[b], i_h[b])
+
+
+def _check_layout_parity(kind, ops, seed=0):
+    x = make_corpus(240, d=16, rank=4, seed=20 + seed)
+    ids = np.arange(1, 241)
+    q = make_corpus(4, d=16, rank=4, seed=11)
+    dev, host = _build_pair(kind, x, seed=seed)
+    base = [("add", 0, 120)]
+    tol = 1e-4 if kind == "ivf-flat" else 5e-4   # PQ: LUT-sum order differs
+    for idx in (dev, host):
+        _apply_ops(idx, base, x, ids)
+    _assert_search_parity(dev, host, q, 10, tol)
+    for step in ops:
+        for idx in (dev, host):
+            _apply_ops(idx, [step], x, ids)
+    _assert_search_parity(dev, host, q, 10, tol)
+
+
+@pytest.mark.parametrize("kind", ["ivf-flat", "ivf-pq"])
+def test_csr_matches_host_layout_fixed_sequences(kind):
+    """Deterministic parity sequences (run even without hypothesis)."""
+    _check_layout_parity(kind, [("add", 120, 60), ("remove", 30, 40),
+                                ("upsert", 10, 20), ("compact", 180, 60),
+                                ("remove", 200, 39), ("upsert", 100, 50)])
+    _check_layout_parity(kind, [("remove", 0, 120), ("add", 120, 120),
+                                ("compact", 0, 120)], seed=1)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(kind=st.sampled_from(["ivf-flat", "ivf-pq"]),
+       ops=st.lists(
+           st.tuples(st.sampled_from(["add", "remove", "upsert", "compact"]),
+                     st.integers(min_value=0, max_value=239),
+                     st.integers(min_value=1, max_value=60)),
+           min_size=1, max_size=4))
+def test_csr_matches_host_layout_property(kind, ops):
+    """Property: padded-CSR search() == legacy host path for any
+    add/remove/upsert/compact sequence (exact for ivf-flat, within PQ
+    float tolerance for ivf-pq)."""
+    _check_layout_parity(kind, ops)
+
+
+@pytest.mark.parametrize("kind", ["ivf-flat", "ivf-pq"])
+def test_csr_one_executable_per_cap_bucket(kind):
+    """Searches across batches with different candidate loads reuse ONE
+    warm executable per (index kind, cap bucket); growing into the next
+    power-of-two bucket compiles exactly one more."""
+    from repro import training
+    x = make_corpus(400, d=16, rank=4, seed=5)
+    ids = np.arange(1, 401)
+    q = make_corpus(8, d=16, rank=4, seed=6)
+    idx = serving.make_index(
+        kind, 16, ivf=serving.IVFConfig(nlist=8, nprobe=4),
+        pq=serving.PQConfig(n_subvec=4, n_codes=16))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    idx.add(ids[:200], x[:200])
+    cap0 = idx.cap
+    # warm: the cap0 search executable plus the fixed-shape mutation ops
+    idx.search(q, 10)
+    idx.remove(ids[:8]); idx.add(ids[:8], x[:8])
+    idx.search(q, 10)
+    with training.CompileCounter() as cc:
+        for i in range(3):       # net-zero mutations: load varies, cap fixed
+            lo = 8 * i + 8
+            idx.remove(ids[lo:lo + 8])
+            idx.search(q, 10)
+            idx.add(ids[lo:lo + 8], x[lo:lo + 8])
+            idx.search(q, 10)
+    assert idx.cap == cap0
+    assert cc.count == 0, f"warm cap bucket recompiled {cc.count}x"
+    idx.add(ids[200:], x[200:])              # overflow -> next pow2 bucket
+    cap1 = idx.cap
+    assert cap1 > cap0
+    with training.CompileCounter() as cc2:
+        idx.search(q, 10)                    # first search at the new cap
+    assert cc2.count >= 1
+    idx.remove(ids[:8]); idx.add(ids[:8], x[:8])   # warm mutations @ new cap
+    idx.search(q, 10)
+    with training.CompileCounter() as cc3:
+        for i in range(3):
+            lo = 8 * i + 8
+            idx.remove(ids[lo:lo + 8])
+            idx.search(q, 10)
+            idx.add(ids[lo:lo + 8], x[lo:lo + 8])
+            idx.search(q, 10)
+    assert idx.cap == cap1
+    assert cc3.count == 0, f"new cap bucket recompiled {cc3.count}x"
+
+
+# ------------------------------------------------- probe-metric recall
+def make_clustered_unit(n=2000, d=32, n_dir=16, noise=0.25, seed=0):
+    """Unit-norm direction clusters — the spectral shape of PLM news
+    embeddings (topically clustered, norm-concentrated)."""
+    rng = np.random.default_rng(seed)
+    dirs = rng.normal(size=(n_dir, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    x = dirs[rng.integers(0, n_dir, n)] + noise * rng.normal(size=(n, d))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return x.astype(np.float32), dirs
+
+
+def test_l2_probe_recall_not_worse_than_ip():
+    """Regression (metric mismatch): probing by the partition's own
+    spherical/L2 metric must never lose to the legacy inner-product
+    ranking against the raw cell means, at any fixed nprobe."""
+    x, dirs = make_clustered_unit()
+    rng = np.random.default_rng(7)
+    q = dirs[rng.integers(0, 16, 24)] + 0.15 * rng.normal(size=(24, 32))
+    q = (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+    ids = np.arange(1, x.shape[0] + 1)
+    exact = serving.FlatIndex(x.shape[1])
+    exact.add(ids, x)
+    _, ref_ids = exact.search(q, 10)
+
+    recalls = {}
+    for metric in ("l2", "ip"):
+        idx = serving.make_index(
+            "ivf-flat", x.shape[1],
+            ivf=serving.IVFConfig(nlist=32, nprobe=1, metric=metric))
+        idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+        idx.add(ids, x)
+        for nprobe in (1, 2, 4):
+            idx.cfg = dataclasses.replace(idx.cfg, nprobe=nprobe)
+            _, got = idx.search(q, 10)
+            recalls[metric, nprobe] = recall_at_k(got, ref_ids)
+    for nprobe in (1, 2, 4):
+        assert recalls["l2", nprobe] >= recalls["ip", nprobe], recalls
+    assert recalls["l2", 4] >= 0.9
+
+
+# --------------------------------------------- hybrid over-fetch contract
+def test_hybrid_returns_exactly_k_from_joint_tiers():
+    """Whenever the two tiers jointly hold >= k distinct ids, the merged
+    result is exactly k valid distinct ids."""
+    rng = np.random.default_rng(3)
+    d, k = 8, 5
+    xm = rng.normal(size=(3, d)).astype(np.float32)
+    xd = rng.normal(size=(4, d)).astype(np.float32)
+    q = rng.normal(size=(2, d)).astype(np.float32)
+    main = serving.FlatIndex(d)
+    main.add(np.array([1, 2, 3]), xm)
+    delta = serving.DeltaBuffer(d, compact_threshold=10 ** 9)
+    delta.add(np.array([2, 3, 4, 5]), xd)    # jointly {1..5}: exactly k
+    s, i = serving.hybrid_search(main, delta, q, k)
+    for b in range(q.shape[0]):
+        assert (i[b] != serving.PAD_ID).all()
+        assert len(set(i[b].tolist())) == k
+        assert set(i[b].tolist()) == {1, 2, 3, 4, 5}
+        assert np.isfinite(s[b]).all()
+
+
+def test_hybrid_equals_compaction_under_stale_saturation():
+    """Regression (hybrid under-fill / window loss): when every id in the
+    main tier's top-k window is stale (republished into the delta with
+    embeddings that now rank at the bottom), the merged result must still
+    equal the post-compaction search — the fresh main ids that the stale
+    entries pushed out of the window must be recovered."""
+    rng = np.random.default_rng(4)
+    d, n, k = 16, 60, 5
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(2, d)).astype(np.float32)
+    ids = np.arange(1, n + 1)
+    # republish the ids dominating BOTH queries' rankings, demoted so far
+    # they drop out of the true top-k entirely
+    top = np.unique(np.argsort(-(q @ x.T), axis=1)[:, :10])
+    stale_ids = ids[top]
+
+    def build():
+        main = serving.FlatIndex(d)
+        main.add(ids, x)
+        delta = serving.DeltaBuffer(d, compact_threshold=10 ** 9)
+        delta.add(stale_ids, -x[top])
+        return main, delta
+
+    main, delta = build()
+    s_h, i_h = serving.hybrid_search(main, delta, q, k)
+    main2, delta2 = build()
+    delta2.compact_into(main2)
+    s_c, i_c = main2.search(q, k)
+    np.testing.assert_array_equal(i_h, i_c)
+    np.testing.assert_allclose(s_h, s_c, rtol=1e-5, atol=1e-5)
+    assert (i_h != serving.PAD_ID).all()
+
+
+# ------------------------------------------------- publish scatter path
+def test_publish_scatters_rows_without_full_reupload():
+    """Regression (publish H2D storm): publishing a handful of fresh ids
+    must not re-upload the whole [N, d] store to device.  Everything but
+    the explicit device_put of the changed rows runs under a host->device
+    transfer guard."""
+    from repro.launch.serve import Recommender
+    d, n = 16, 50
+    store = np.zeros((n, d), np.float32)
+    svc = serving.RetrievalService(
+        serving.FlatIndex(d), store, k=5,
+        delta=serving.DeltaBuffer(d, compact_threshold=10 ** 9))
+    rec = object.__new__(Recommender)       # publish needs only these two
+    rec.service = svc
+    rec._emb = jnp.asarray(store)
+    rec.publish(np.array([3, 7]), np.ones((2, d), np.float32))  # warm
+    fresh = 2.0 * np.ones((2, d), np.float32)
+    with jax.transfer_guard_host_to_device("disallow"):
+        rec.publish(np.array([9, 11]), fresh)
+    np.testing.assert_allclose(np.asarray(rec._emb)[[9, 11]], fresh)
+    np.testing.assert_allclose(np.asarray(rec._emb[3]), np.ones(d))
+    assert rec._emb.shape == (n, d)
+    # growth path: out-of-range ids extend both store and device matrix
+    rec.publish(np.array([n + 2]), 3.0 * np.ones((1, d), np.float32))
+    assert rec.service.store_emb.shape[0] == n + 3
+    assert rec._emb.shape == (n + 3, d)
+    np.testing.assert_allclose(np.asarray(rec._emb[n + 2]), 3.0 * np.ones(d))
+    # a duplicated id within one batch resolves last-write-wins in BOTH
+    # the numpy store and the device matrix (scatter order for duplicate
+    # indices is undefined, so publish dedups before scattering)
+    dup = np.stack([4.0 * np.ones(d), 5.0 * np.ones(d)]).astype(np.float32)
+    rec.publish(np.array([13, 13]), dup)
+    np.testing.assert_allclose(rec.service.store_emb[13], dup[1])
+    np.testing.assert_allclose(np.asarray(rec._emb[13]), dup[1])
+    # ids the device index could never hold are rejected at the entry
+    # point, not at some later compaction
+    with pytest.raises(ValueError, match="2\\*\\*31"):
+        rec.publish(np.array([2 ** 31]), np.ones((1, d), np.float32))
+    with pytest.raises(ValueError, match="2\\*\\*31"):
+        rec.publish(np.array([-1]), np.ones((1, d), np.float32))
+
+
+def test_hybrid_overfetch_width_is_quantized():
+    """Regression: the over-fetch width k + len(delta) is a static shape
+    of the device index's jitted search, so it is rounded up to a power
+    of two — publishes that grow the delta inside one bucket must not
+    mint new search executables (the delta tier's own brute-force scan
+    recompiling per size is separate, known PR-1 behavior)."""
+    from repro.serving.index import _search_flat_csr
+    x = make_corpus(400, d=16, rank=4, seed=8)
+    ids = np.arange(1, 401)
+    q = make_corpus(8, d=16, rank=4, seed=9)
+    idx = serving.make_index("ivf-flat", 16,
+                             ivf=serving.IVFConfig(nlist=8, nprobe=4))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    idx.add(ids[:380], x[:380])
+    delta = serving.DeltaBuffer(16, compact_threshold=10 ** 9)
+    delta.add(ids[380:385], x[380:385])          # len 5 -> fetch width 16
+    serving.hybrid_search(idx, delta, q, 8)      # warm the width-16 entry
+    n0 = _search_flat_csr._cache_size()
+    for hi in (386, 387, 388):                   # len 6, 7, 8 -> still 16
+        delta.add(ids[hi - 1:hi], x[hi - 1:hi])
+        _, i = serving.hybrid_search(idx, delta, q, 8)
+        assert (i != serving.PAD_ID).all()
+    assert _search_flat_csr._cache_size() == n0, \
+        "delta growth within a pow2 bucket minted a new search executable"
+
+
+def test_device_layout_rejects_int32_overflow_ids():
+    """Device lists store ids as int32; ids that would silently wrap (or
+    collide with PAD_ID) must be rejected, not truncated."""
+    x = make_corpus(64, d=16, rank=4, seed=12)
+    idx = serving.make_index("ivf-flat", 16,
+                             ivf=serving.IVFConfig(nlist=4, nprobe=4))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    with pytest.raises(ValueError, match="2\\*\\*31"):
+        idx.add(np.array([2 ** 31 + 5]), x[:1])
+    with pytest.raises(ValueError, match="2\\*\\*31"):
+        idx.add(np.array([-3]), x[:1])
+    idx.add(np.arange(1, 65), x)                 # in-range ids still fine
+    assert idx.ntotal == 64
