@@ -22,7 +22,7 @@ from repro.nn import dense, layernorm, sdpa
 from .plm import PLMConfig, additive_attention, embed_inputs, ffn
 
 
-def _bus_attention_layer(layer, h, mask, cfg: PLMConfig, impl: str = "xla"):
+def _bus_attention_layer(layer, h, mask, cfg: PLMConfig, impl: str):
     """One BusLM layer. h: [M, K, S, d]; mask: [M, K, S] bool."""
     M, K, S, d = h.shape
     nh = cfg.n_heads
@@ -63,11 +63,17 @@ def _bus_attention_layer(layer, h, mask, cfg: PLMConfig, impl: str = "xla"):
 
 
 def buslm_encode(params, cfg: PLMConfig, tokens, freq=None, mask=None,
-                 impl: str = "xla"):
+                 impl: str | None = None):
     """Encode news articles. tokens: [M, K, S] -> [M, news_dim].
 
     Valid (non-pad) tokens are ``tokens != 0``; pass ``mask`` to override.
+    ``impl`` defaults to ``cfg.attn_impl`` ("auto" resolves to the fused
+    Pallas kernels whenever the backend compiles them natively); gradients
+    flow through the kernel's custom VJP, so this is the training path,
+    not just an inference fast path.
     """
+    from repro.kernels.ops import resolve_attn_impl
+    impl = resolve_attn_impl(impl if impl is not None else cfg.attn_impl)
     if mask is None:
         mask = tokens != 0
     h = embed_inputs(params, cfg, tokens, freq)               # [M, K, S, d]

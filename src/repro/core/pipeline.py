@@ -39,7 +39,14 @@ class SpeedyFeedConfig:
     hist_len: int = 100       # L
     merged_cap: int = 512     # M
     n_neg: int = 4            # negatives per prediction
-    attn_impl: str = "xla"    # xla | pallas
+
+    @property
+    def attn_impl(self) -> str:
+        """Attention implementation for the training hot path — auto
+        (pallas on TPU, xla elsewhere) | xla | pallas.  The PLM config is
+        the single source of truth (the encoder owns the kernels); this
+        is a read-through so per-step code and configs can't diverge."""
+        return self.plm.attn_impl
 
 
 def make_config(*, vocab=30522, n_layers=12, d_model=768, n_heads=12,
@@ -47,11 +54,12 @@ def make_config(*, vocab=30522, n_layers=12, d_model=768, n_heads=12,
                 n_news=1_202_576, gamma=20, beta=2e-3, encode_budget=256,
                 batch_users=32, hist_len=100, merged_cap=512, n_neg=4,
                 user_kind="attentive", use_bus=True, use_freq=True,
-                remat=False) -> SpeedyFeedConfig:
+                remat=False, attn_impl="auto") -> SpeedyFeedConfig:
     plm = PLMConfig(vocab=vocab, n_layers=n_layers, d_model=d_model,
                     n_heads=n_heads, d_ff=d_ff, n_segments=n_segments,
                     seg_len=seg_len, news_dim=news_dim, use_bus=use_bus,
-                    use_freq_embedding=use_freq, remat=remat)
+                    use_freq_embedding=use_freq, remat=remat,
+                    attn_impl=attn_impl)
     user = UserModelConfig(news_dim=news_dim, kind=user_kind, causal=True)
     cache = CacheConfig(n_news=n_news, news_dim=news_dim, gamma=gamma,
                         beta=beta, encode_budget=encode_budget)

@@ -34,6 +34,9 @@ class PLMConfig:
     use_bus: bool = True
     dtype: str = "float32"
     remat: bool = False
+    attn_impl: str = "auto"      # auto (pallas on TPU, xla elsewhere) |
+    #                              xla | pallas — resolved per call by
+    #                              kernels.ops.resolve_attn_impl
 
     @property
     def attn(self) -> AttnConfig:

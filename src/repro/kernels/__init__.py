@@ -1,7 +1,10 @@
 # Pallas TPU kernels for the perf-critical compute layers:
-#   flash_attention — causal GQA streaming attention (LM family hot spot)
-#   bus_attention   — BusLM fused segment+bus attention (the paper's kernel)
+#   flash_attention — causal GQA streaming attention, fwd + custom-VJP bwd
+#   bus_attention   — BusLM fused segment+bus attention (the paper's
+#                     kernel), fwd + custom-VJP bwd
 #   embedding_bag   — fused gather+reduce over embedding tables (recsys)
-# Each kernel has a pure-jnp oracle in ref.py; ops.py exposes jit'd wrappers
+#   pq_scoring      — ADC LUT scoring for the serving tier
+# Each kernel has a pure-jnp oracle in ref.py (incl. reference VJPs for
+# the attention pair); ops.py exposes the differentiable jit'd wrappers
 # (interpret mode on CPU, Mosaic on TPU).
 from . import ops, ref

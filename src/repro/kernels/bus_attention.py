@@ -1,5 +1,5 @@
 """BusLM segment+bus attention — the paper's kernel (§4.1.3) as a Pallas
-TPU kernel.
+TPU kernel, forward AND backward.
 
 Problem shape: M news x K segments x S tokens attend over the segment's own
 S keys PLUS the K bus proxies ([CLS] of every segment of the same news) —
@@ -10,10 +10,20 @@ than a streaming flash loop — probabilities never exist in HBM, and the
 bus concat is materialized once by the wrapper instead of per-layer
 (wrapper ops.bus_attention builds kv = [segment, bus]).
 
+Backward is ONE fused kernel over the same grid: because the whole tile
+is resident, it recomputes the softmax locally (same max-subtraction
+arithmetic as the forward — bit-identical p even for fully-masked padded
+segments, where reconstructing p from a stored logsumexp would collapse
+under f32 cancellation; that is also why, unlike the flash kernel, the
+forward emits no lse residual — it would be dead weight in the hot path)
+and produces dq/dk/dv in a single pass, f32 accumulation. Gradients for
+the bus *columns* of dk/dv flow back to the segment CLS rows through the
+wrapper's concat by plain autodiff — the kernel's custom_vjp boundary is
+(q, k, v, mask) -> o, see kernels.ops.bus_attention.
+
 Grid: (M_blocks, K, H); block = one head of one segment for a block of
-news. MXU alignment: the wrapper pads S and Sk up to multiples of 8 lanes x
-128 sublanes are handled by Mosaic for these small tiles; D = d_model /
-n_heads (64 for the production PLM).
+news. The ops wrapper pads M up to a block_m multiple (padded rows carry
+an all-False mask and are sliced off) instead of degrading block_m.
 """
 from __future__ import annotations
 
@@ -26,49 +36,100 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale: float):
+def _tile_softmax(q, k, mask, scale):
+    """Masked scores + stable softmax for one [bm, S, Sk] tile; returns
+    (p, l, masked scores) with the exact arithmetic the forward uses."""
+    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,)))) * scale
+    s = jnp.where(mask[:, None, :], s, NEG_INF)          # [bm, S, Sk]
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return p, l, m
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, scale: float):
     # blocks: q [bm, 1, S, 1, D]; k/v [bm, 1, Sk, 1, D]; mask [bm, 1, Sk]
     q = q_ref[:, 0, :, 0, :].astype(jnp.float32)         # [bm, S, D]
     k = k_ref[:, 0, :, 0, :].astype(jnp.float32)         # [bm, Sk, D]
     v = v_ref[:, 0, :, 0, :].astype(jnp.float32)
     mask = mask_ref[:, 0, :]                             # [bm, Sk] bool
-    s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,)))) * scale
-    s = jnp.where(mask[:, None, :], s, NEG_INF)          # [bm, S, Sk]
-    m = s.max(axis=-1, keepdims=True)
-    p = jnp.exp(s - m)
-    denom = jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
-    o = jax.lax.dot_general(p / denom, v, (((2,), (1,)), ((0,), (0,))))
+    p, l, _ = _tile_softmax(q, k, mask, scale)
+    o = jax.lax.dot_general(p / l, v, (((2,), (1,)), ((0,), (0,))))
     o_ref[:, 0, :, 0, :] = o.astype(o_ref.dtype)
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, mask_ref, do_ref, dq_ref, dk_ref,
+                dv_ref, *, scale: float):
+    q = q_ref[:, 0, :, 0, :].astype(jnp.float32)         # [bm, S, D]
+    k = k_ref[:, 0, :, 0, :].astype(jnp.float32)         # [bm, Sk, D]
+    v = v_ref[:, 0, :, 0, :].astype(jnp.float32)
+    mask = mask_ref[:, 0, :]
+    do = do_ref[:, 0, :, 0, :].astype(jnp.float32)       # [bm, S, D]
+    p, l, _ = _tile_softmax(q, k, mask, scale)
+    p = p / l                                            # [bm, S, Sk]
+    dv = jax.lax.dot_general(p, do, (((1,), (1,)), ((0,), (0,))))
+    dp = jax.lax.dot_general(do, v, (((2,), (2,)), ((0,), (0,))))
+    delta = (p * dp).sum(axis=-1, keepdims=True)         # [bm, S, 1]
+    # masked keys' scores came through jnp.where -> their ds is exactly 0
+    ds = jnp.where(mask[:, None, :], p * (dp - delta), 0.0) * scale
+    dq = jax.lax.dot_general(ds, k, (((2,), (1,)), ((0,), (0,))))
+    dk = jax.lax.dot_general(ds, q, (((1,), (1,)), ((0,), (0,))))
+    dq_ref[:, 0, :, 0, :] = dq.astype(dq_ref.dtype)
+    dk_ref[:, 0, :, 0, :] = dk.astype(dk_ref.dtype)
+    dv_ref[:, 0, :, 0, :] = dv.astype(dv_ref.dtype)
+
+
+def _specs(S, Sk, H, D, block_m):
+    q_spec = pl.BlockSpec((block_m, 1, S, 1, D),
+                          lambda m, kk, h: (m, kk, 0, h, 0))
+    kv_spec = pl.BlockSpec((block_m, 1, Sk, 1, D),
+                           lambda m, kk, h: (m, kk, 0, h, 0))
+    mask_spec = pl.BlockSpec((block_m, 1, Sk), lambda m, kk, h: (m, kk, 0))
+    return q_spec, kv_spec, mask_spec
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def bus_attention(q, k, v, kv_mask, *, block_m: int = 8,
                   interpret: bool = True):
-    """q: [M, K, S, H, D]; k/v: [M, K, Sk, H, D]; kv_mask: [M, K, Sk].
-
-    Returns [M, K, S, H, D]. Sk = S + K (bus columns appended by the
-    wrapper); masked (padded) keys contribute nothing.
-    """
+    """q: [M, K, S, H, D]; k/v: [M, K, Sk, H, D]; kv_mask: [M, K, Sk] ->
+    [M, K, S, H, D]. Sk = S + K (bus columns appended by the wrapper);
+    masked (padded) keys contribute nothing. M % block_m == 0 (the ops
+    wrapper pads odd merged-set sizes up and masks the tail)."""
     M, K, S, H, D = q.shape
     Sk = k.shape[2]
     block_m = min(block_m, M)
-    assert M % block_m == 0, "merged-set size must divide block_m"
-    scale = D ** -0.5
-    kernel = functools.partial(_kernel, scale=scale)
+    assert M % block_m == 0, "pad M to a block_m multiple (ops.bus_attention)"
+    q_spec, kv_spec, mask_spec = _specs(S, Sk, H, D, block_m)
+    kernel = functools.partial(_fwd_kernel, scale=D ** -0.5)
     return pl.pallas_call(
         kernel,
         grid=(M // block_m, K, H),
-        in_specs=[
-            pl.BlockSpec((block_m, 1, S, 1, D),
-                         lambda m, kk, h: (m, kk, 0, h, 0)),
-            pl.BlockSpec((block_m, 1, Sk, 1, D),
-                         lambda m, kk, h: (m, kk, 0, h, 0)),
-            pl.BlockSpec((block_m, 1, Sk, 1, D),
-                         lambda m, kk, h: (m, kk, 0, h, 0)),
-            pl.BlockSpec((block_m, 1, Sk), lambda m, kk, h: (m, kk, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_m, 1, S, 1, D),
-                               lambda m, kk, h: (m, kk, 0, h, 0)),
+        in_specs=[q_spec, kv_spec, kv_spec, mask_spec],
+        out_specs=q_spec,
         out_shape=jax.ShapeDtypeStruct((M, K, S, H, D), q.dtype),
         interpret=interpret,
     )(q, k, v, kv_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def bus_attention_bwd(q, k, v, kv_mask, do, *, block_m: int = 8,
+                      interpret: bool = True):
+    """(dq, dk, dv) for one fused tile pass; mask gets no cotangent."""
+    M, K, S, H, D = q.shape
+    Sk = k.shape[2]
+    block_m = min(block_m, M)
+    assert M % block_m == 0
+    q_spec, kv_spec, mask_spec = _specs(S, Sk, H, D, block_m)
+    kernel = functools.partial(_bwd_kernel, scale=D ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, K, H),
+        in_specs=[q_spec, kv_spec, kv_spec, mask_spec, q_spec],
+        out_specs=[q_spec, kv_spec, kv_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, K, S, H, D), q.dtype),
+            jax.ShapeDtypeStruct((M, K, Sk, H, D), k.dtype),
+            jax.ShapeDtypeStruct((M, K, Sk, H, D), v.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_mask, do)

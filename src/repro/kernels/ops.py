@@ -1,12 +1,33 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Public, differentiable entry points for the Pallas kernels.
 
-On this container (CPU) every kernel runs in interpret mode — the kernel
-body executes in Python with real Pallas semantics — which is the
-correctness-validation path; on TPU the same calls compile to Mosaic.
+The attention kernels are TRAINABLE: ``flash_attention`` and
+``bus_attention`` are ``jax.custom_vjp`` pairs over the forward kernels
+and recompute-based backward kernels (kernels/flash_attention.py —
+whose forward emits the logsumexp residual the streaming backward needs —
+and kernels/bus_attention.py, whose single-tile backward re-derives the
+masked softmax locally), so ``jax.grad``
+through ``repro.nn.attention(..., impl="pallas")`` and
+``core.buslm_encode(..., impl="pallas")`` runs fused Pallas in BOTH
+directions — the [S, Sk] probability matrix exists in neither pass.
+Residuals are q/k/v (+ o/lse for flash): O(S*D) per head, which is why
+the kernels compose with ``jax.checkpoint``/``cfg.remat`` without a
+second recompute of anything quadratic. Inputs may be bf16; every kernel
+accumulates in f32 and returns gradients in the primal dtypes.
+
+Backend selection: on this container (CPU) every kernel runs in
+interpret mode — the kernel body executes with real Pallas semantics,
+the correctness-validation path; on TPU the same calls compile to
+Mosaic. ``resolve_attn_impl`` maps the configs' default ``"auto"`` to
+"pallas" exactly when the backend compiles it for real (TPU), so the
+training hot path picks the fused kernels up automatically on device
+while CPU test runs keep the fast XLA reference.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from . import bus_attention as _bus
 from . import embedding_bag as _ebag
@@ -18,19 +39,109 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def default_attn_impl() -> str:
+    """Pallas when the backend compiles it natively, else the XLA path
+    (interpret mode stays available behind an explicit impl="pallas")."""
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def resolve_attn_impl(impl: str | None) -> str:
+    if impl in (None, "auto"):
+        return default_attn_impl()
+    if impl not in ("xla", "pallas"):
+        raise ValueError(f"unknown attn impl: {impl!r}")
+    return impl
+
+
+FLASH_BLOCK = 128      # default block_q/block_k of flash_attention
+
+
+def flash_attention_supported(seq_len: int) -> bool:
+    """Whether the default-block flash kernel accepts this (self-attention)
+    sequence length: S must divide into the clamped block and stay
+    sublane-aligned.  Callers use this to fall back to XLA instead of
+    tripping the kernel's divisibility assert inside jit."""
+    return seq_len % 8 == 0 and seq_len % min(FLASH_BLOCK, seq_len) == 0
+
+
+# ---------------------------------------------------------------------------
+# flash attention (custom VJP: fwd emits lse; bwd = dQ pass + dK/dV pass)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_vjp(q, k, v, causal, block_q, block_k, interpret):
+    return _flash.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+def _flash_vjp_fwd(q, k, v, causal, block_q, block_k, interpret):
+    o, lse = _flash.flash_attention_fwd(q, k, v, causal=causal,
+                                        block_q=block_q, block_k=block_k,
+                                        interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_vjp_bwd(causal, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    return _flash.flash_attention_bwd(q, k, v, o, lse, do, causal=causal,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=interpret)
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128):
-    return _flash.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                                  block_k=block_k, interpret=_interpret())
+    return _flash_vjp(q, k, v, causal, block_q, block_k, _interpret())
+
+
+# ---------------------------------------------------------------------------
+# bus attention (custom VJP: one fused tile pass per direction; odd merged
+# set sizes pad M up to the block instead of degrading block_m to 1)
+# ---------------------------------------------------------------------------
+
+def _pad_rows(x, m_pad: int):
+    return jnp.pad(x, ((0, m_pad),) + ((0, 0),) * (x.ndim - 1))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _bus_vjp(q, k, v, kv_mask, block_m, interpret):
+    return _bus_vjp_fwd(q, k, v, kv_mask, block_m, interpret)[0]
+
+
+def _bus_vjp_fwd(q, k, v, kv_mask, block_m, interpret):
+    M = q.shape[0]
+    m_pad = -M % min(block_m, M)
+    if m_pad:      # padded rows: all-False mask, sliced off below
+        q, k, v = (_pad_rows(t, m_pad) for t in (q, k, v))
+        kv_mask = _pad_rows(kv_mask, m_pad)
+    o = _bus.bus_attention(q, k, v, kv_mask, block_m=block_m,
+                           interpret=interpret)
+    return o[:M], (q, k, v, kv_mask)
+
+
+def _bus_vjp_bwd(block_m, interpret, res, do):
+    q, k, v, kv_mask = res          # already padded to the block multiple
+    m_pad = q.shape[0] - do.shape[0]
+    if m_pad:
+        do = _pad_rows(do, m_pad)
+    dq, dk, dv = _bus.bus_attention_bwd(q, k, v, kv_mask, do,
+                                        block_m=block_m, interpret=interpret)
+    M = q.shape[0] - m_pad
+    return dq[:M], dk[:M], dv[:M], None
+
+
+_bus_vjp.defvjp(_bus_vjp_fwd, _bus_vjp_bwd)
 
 
 def bus_attention(q, k, v, kv_mask, *, block_m: int = 8):
-    M = q.shape[0]
-    while M % block_m:
-        block_m //= 2
-    return _bus.bus_attention(q, k, v, kv_mask, block_m=max(block_m, 1),
-                              interpret=_interpret())
+    return _bus_vjp(q, k, v, kv_mask, block_m, _interpret())
 
+
+# ---------------------------------------------------------------------------
+# forward-only kernels
+# ---------------------------------------------------------------------------
 
 def embedding_bag(table, idx, weights=None):
     return _ebag.embedding_bag(table, idx, weights, interpret=_interpret())

@@ -15,9 +15,10 @@ anyway, so fusing the gather into a matmul is free throughput.
 
 Layouts:
   lut    [B, M, K]  f32   one table per query
-  codes  [Bc, N, M] int32 Bc == B (per-query candidate lists, IVF path)
-                          or Bc == 1 (one shared corpus scan, flat-PQ path —
-                          the block index_map broadcasts without copying)
+  codes  [Bc, N, M] uint8 (or int32) — Bc == B (per-query candidate
+                          lists, IVF path) or Bc == 1 (one shared corpus
+                          scan, flat-PQ path — the block index_map
+                          broadcasts without copying)
   valid  [Bv, N]    bool  optional slot validity (padded-CSR gathers carry
                           unwritten tail slots; invalid scores come back
                           -inf so a downstream top-k never selects them)
@@ -37,7 +38,7 @@ from jax.experimental import pallas as pl
 
 def _block_scores(lut_ref, codes_ref, *, n_codes: int):
     lut = lut_ref[0].astype(jnp.float32)            # [M, K]
-    codes = codes_ref[0]                            # [bn, M] int32
+    codes = codes_ref[0].astype(jnp.int32)          # [bn, M] (uint8 or i32)
     bn, M = codes.shape
     iota = jax.lax.broadcasted_iota(jnp.int32, (bn, M, n_codes), 2)
     onehot = (iota == codes[:, :, None]).astype(jnp.float32)
@@ -61,7 +62,7 @@ def _masked_kernel(lut_ref, codes_ref, valid_ref, o_ref, *, n_codes: int):
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
 def pq_lut_scores(lut, codes, valid=None, *, block_n: int = 128,
                   interpret: bool = True):
-    """lut: [B, M, K] f32; codes: [Bc, N, M] int32 with Bc in {1, B}.
+    """lut: [B, M, K] f32; codes: [Bc, N, M] uint8/int32 with Bc in {1, B}.
 
     Returns [B, N] f32: out[b, n] = sum_m lut[b, m, codes[min(b,Bc-1), n, m]].
     With valid [Bv, N] (Bv in {1, B}), out[b, n] = -inf where not

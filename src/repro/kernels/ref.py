@@ -42,6 +42,22 @@ def bus_attention(q, k, v, kv_mask):
     return o.astype(q.dtype)
 
 
+def flash_attention_vjp(q, k, v, do, *, causal: bool = True):
+    """XLA-autodiff reference (dq, dk, dv) for flash_attention — the
+    contract the Pallas backward kernels are tested against."""
+    out, vjp = jax.vjp(
+        lambda q, k, v: flash_attention(q, k, v, causal=causal), q, k, v)
+    return vjp(do.astype(out.dtype))
+
+
+def bus_attention_vjp(q, k, v, kv_mask, do):
+    """XLA-autodiff reference (dq, dk, dv) for bus_attention (the mask is
+    non-differentiable, matching the kernel's custom_vjp)."""
+    out, vjp = jax.vjp(
+        lambda q, k, v: bus_attention(q, k, v, kv_mask), q, k, v)
+    return vjp(do.astype(out.dtype))
+
+
 def embedding_bag(table, idx, weights=None):
     """table: [V, d]; idx: [B, F, nnz] -> [B, F, d] weighted sums."""
     emb = jnp.take(table, idx, axis=0)
@@ -59,7 +75,7 @@ def pq_lut_scores(lut, codes, valid=None):
     """
     gathered = jnp.take_along_axis(
         lut[:, None, :, :].astype(jnp.float32),          # [B, 1, M, K]
-        codes[:, :, :, None],                            # [Bc, N, M, 1]
+        codes[:, :, :, None].astype(jnp.int32),          # [Bc, N, M, 1]
         axis=-1)                                         # [B, N, M, 1]
     scores = gathered[..., 0].sum(axis=-1)
     if valid is not None:

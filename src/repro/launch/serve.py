@@ -13,8 +13,7 @@ Architecture (paper §5.1.4 production setup, rebuilt on repro.serving):
      top-k.  Per-request latency includes time spent queued.
 
 Run: python -m repro.launch.serve --requests 64 --batch 16 \
-         [--index ivf-pq|ivf-flat|exact] [--layout device|host]
-         [--nprobe 8] [--k-prime 64]
+         [--index ivf-pq|ivf-flat|exact] [--nprobe 8] [--k-prime 64]
 """
 from __future__ import annotations
 
@@ -47,7 +46,6 @@ class ServeStats:
     recall_ok: bool
     index_kind: str = "exact"
     ntotal: int = 0
-    layout: str = "device"
 
 
 class Recommender:
@@ -55,10 +53,9 @@ class Recommender:
 
     def __init__(self, cfg: core.SpeedyFeedConfig, params, store, *, k=10,
                  index_kind: str = "ivf-pq", nprobe: int = 8,
-                 k_prime: int | None = None, layout: str = "device"):
+                 k_prime: int | None = None):
         self.cfg, self.params, self.store, self.k = cfg, params, store, k
         self.index_kind = index_kind
-        self.layout = layout
         self.nprobe = nprobe
         self.k_prime = k_prime or max(4 * k, 32)
         self.service: serving.RetrievalService | None = None
@@ -100,8 +97,7 @@ class Recommender:
         index = serving.make_index(
             self.index_kind, emb.shape[1],
             ivf=serving.IVFConfig(nlist=nlist,
-                                  nprobe=min(self.nprobe, nlist)),
-            layout=self.layout)
+                                  nprobe=min(self.nprobe, nlist)))
         ids = np.arange(1, n)     # row 0 is the pad news: never a candidate
         index.train(jax.random.PRNGKey(seed), jnp.asarray(emb[1:]))
         index.add(ids, emb[1:])
@@ -184,9 +180,6 @@ def main(argv=None):
                     choices=["exact", "ivf-flat", "ivf-pq"])
     ap.add_argument("--nprobe", type=int, default=8)
     ap.add_argument("--k-prime", type=int, default=64)
-    ap.add_argument("--layout", default="device", choices=["device", "host"],
-                    help="IVF list storage: padded-CSR device arrays with a "
-                         "jitted search, or the legacy ragged host lists")
     args = ap.parse_args(argv)
 
     from repro.launch.train import make_loader, small_speedyfeed_config
@@ -194,8 +187,7 @@ def main(argv=None):
     corpus, log, store, _ = make_loader(cfg)
     params, _ = core.speedyfeed_state(cfg)
     rec = Recommender(cfg, params, store, k=args.k, index_kind=args.index,
-                      nprobe=args.nprobe, k_prime=args.k_prime,
-                      layout=args.layout)
+                      nprobe=args.nprobe, k_prime=args.k_prime)
     t0 = time.time()
     rec.build_index()
     print(f"index built: {store.tokens.shape[0]} news "
@@ -213,8 +205,7 @@ def main(argv=None):
                                     and (r != serving.PAD_ID).all()
                                     for r in results),
                       index_kind=args.index,
-                      ntotal=rec.service.index.ntotal,
-                      layout=args.layout)
+                      ntotal=rec.service.index.ntotal)
 
 
 if __name__ == "__main__":

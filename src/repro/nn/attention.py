@@ -3,7 +3,9 @@
 
 The jnp path here is the XLA reference implementation used for dry-runs and
 smoke tests; the Pallas flash kernels in ``repro.kernels`` are drop-in
-replacements for the hot inner product (selected via ``impl='pallas'``).
+*trainable* replacements for the hot inner product (custom-VJP forward and
+backward kernels, selected via ``impl='pallas'`` or the default
+``impl='auto'``, which picks them up on TPU).
 """
 from __future__ import annotations
 
@@ -137,9 +139,24 @@ def chunked_sdpa(q, k, v, *, chunk: int, mask=None):
 # ---------------------------------------------------------------------------
 
 def attention(params, x, cfg: AttnConfig, *, positions=None, mask=None,
-              impl: str = "xla"):
-    """Self-attention over x: [B, S, d_model]."""
+              impl: str = "auto"):
+    """Self-attention over x: [B, S, d_model].
+
+    ``impl="auto"`` resolves to the trainable Pallas flash kernel wherever
+    the backend compiles it natively (see kernels.ops.resolve_attn_impl);
+    gradients flow through its custom VJP. The flash kernel carries no
+    key-validity mask and no local window, and requires S to divide into
+    its blocks — masked calls, chunked-local layers, and odd sequence
+    lengths fall back to the XLA path.
+    """
+    from repro.kernels.ops import flash_attention_supported, resolve_attn_impl
+    impl = resolve_attn_impl(impl)
     B, S, _ = x.shape
+    chunked_local = (cfg.chunk_size is not None and cfg.causal
+                     and S > cfg.chunk_size and S % cfg.chunk_size == 0)
+    if impl == "pallas" and (mask is not None or chunked_local
+                             or not flash_attention_supported(S)):
+        impl = "xla"
     hq, hk, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     q = dense(params["q"], x).reshape(B, S, hq, hd)
     k = dense(params["k"], x).reshape(B, S, hk, hd)
@@ -158,8 +175,7 @@ def attention(params, x, cfg: AttnConfig, *, positions=None, mask=None,
     if impl == "pallas":
         from repro.kernels import ops as kops
         out = kops.flash_attention(q, k, v, causal=cfg.causal)
-    elif (cfg.chunk_size is not None and cfg.causal
-          and S > cfg.chunk_size and S % cfg.chunk_size == 0):
+    elif chunked_local:
         out = chunked_sdpa(q, k, v, chunk=cfg.chunk_size, mask=mask)
     elif (cfg.block_q is not None and S > cfg.block_q
           and S % cfg.block_q == 0):

@@ -7,23 +7,24 @@ raw-L2 partition probed by inner product ranked cells by a metric that
 never built them); a query probes the nprobe nearest cells and scores
 only their members, either in full precision (IVF-Flat) or through
 residual product-quantization codes around the raw-space cell means
-(IVF-PQ, scored with the Pallas LUT kernel).  All indexes share one API:
+(IVF-PQ, uint8 codes scored with the Pallas LUT kernel).  All indexes
+share one API:
 
     idx.train(key, vectors)          # fit quantizers (no-op for Flat)
     idx.add(ids, vectors)            # incremental — used by online deltas
     idx.search(queries, k) -> (scores [B, k], ids [B, k])   np.float32/int64
 
-Host/device split: membership lists are device-resident padded CSR —
-fixed-capacity ``[nlist, cap]`` id/payload arrays plus per-list lengths,
-where ``cap`` grows in power-of-two buckets (MIN_CAP, doubling on
-overflow).  ``add``/``remove`` are device scatters/compactions, and the
-whole query path — cell probe, candidate gather, scoring (einsum for
-IVF-Flat; coarse term + Pallas LUT for IVF-PQ) and masked top-k — is ONE
-jitted executable per (index kind, cap bucket): searches across batches
-with any fill level reuse the warm executable, and a cap growth costs
-exactly one fresh compilation for the new bucket.  ``layout="host"``
-keeps the legacy ragged host-numpy lists (per-query Python gather,
-per-candidate-width recompiles) for one PR as the benchmark baseline.
+Storage is device-resident padded CSR: fixed-capacity ``[nlist, cap]``
+id/payload arrays plus per-list lengths, where ``cap`` grows in
+power-of-two buckets (MIN_CAP, doubling on overflow).  ``add``/``remove``
+are device scatters/compactions, and the whole query path — cell probe,
+candidate gather, scoring (einsum for IVF-Flat; coarse term + Pallas LUT
+for IVF-PQ) and masked top-k — is ONE jitted executable per (index kind,
+cap bucket): searches across batches with any fill level reuse the warm
+executable, and a cap growth costs exactly one fresh compilation for the
+new bucket.  (The legacy ragged host-numpy layout survived PR 3 as the
+benchmark baseline; it is gone — BENCH_retrieval.json recorded its
+3-6x/1.1-1.4x deficits and nothing references it.)
 """
 from __future__ import annotations
 
@@ -75,11 +76,6 @@ def _topk_padded(scores, cand_ids, k):
         s = np.pad(s, ((0, 0), (0, k - k_eff)), constant_values=-np.inf)
         ids = np.pad(ids, ((0, 0), (0, k - k_eff)), constant_values=PAD_ID)
     return s, ids.astype(np.int64)
-
-
-@jax.jit
-def _dot_scores(q, vecs):
-    return jnp.einsum("bd,bcd->bc", q, vecs)
 
 
 # ---------------------------------------------------------------------------
@@ -161,7 +157,7 @@ def _search_flat_csr(q, cent_unit, cent_raw, list_ids, list_vecs, lens, *,
 def _search_pq_csr(q, cent_unit, cent_raw, list_ids, list_codes, lens,
                    cb_centers, *, nprobe: int, k: int, metric: str):
     """Jitted IVF-PQ search: coarse term + masked Pallas LUT over the
-    gathered [B, nprobe*cap, M] padded-CSR codes."""
+    gathered [B, nprobe*cap, M] padded-CSR uint8 codes."""
     from repro.kernels import ops
     B, cap = q.shape[0], list_ids.shape[1]
     probes, cand_ids, valid = _gather_candidates(
@@ -246,51 +242,27 @@ class FlatIndex:
 
 
 class IVFFlatIndex:
-    """IVF coarse quantizer + full-precision scoring of probed cells.
+    """IVF coarse quantizer + full-precision scoring of probed cells,
+    on padded-CSR device storage with a jitted end-to-end search (one
+    warm executable per cap bucket)."""
 
-    layout="device" (default): padded-CSR storage, jitted end-to-end
-    search (one executable per cap bucket).  layout="host": the legacy
-    ragged numpy lists with a per-query Python gather — kept one PR as
-    the benchmark baseline and the property-test oracle.
-    """
-
-    def __init__(self, dim: int, cfg: IVFConfig = IVFConfig(), *,
-                 layout: str = "device"):
-        if layout not in ("device", "host"):
-            raise ValueError(f"unknown layout: {layout!r}")
-        self.dim, self.cfg, self.layout = dim, cfg, layout
+    def __init__(self, dim: int, cfg: IVFConfig = IVFConfig()):
+        self.dim, self.cfg = dim, cfg
         self.centroids = None                  # [nlist, d] np, unit norm
         self.centroids_raw = None              # [nlist, d] np, raw cell means
         self._cent_dev = None                  # unit centroids, device
         self._cent_raw_dev = None              # raw cell means, device
-        if layout == "host":
-            self._list_ids = [np.zeros((0,), np.int64)
-                              for _ in range(cfg.nlist)]
-            self._list_payload = [self._empty_payload_host()
-                                  for _ in range(cfg.nlist)]
-        else:
-            self._cap = MIN_CAP
-            self._ids_dev = jnp.full((cfg.nlist, MIN_CAP), PAD_ID, jnp.int32)
-            self._payload_dev = self._empty_payload_dev(MIN_CAP)
-            self._lens = jnp.zeros((cfg.nlist,), jnp.int32)
+        self._cap = MIN_CAP
+        self._ids_dev = jnp.full((cfg.nlist, MIN_CAP), PAD_ID, jnp.int32)
+        self._payload_dev = self._empty_payload_dev(MIN_CAP)
+        self._lens = jnp.zeros((cfg.nlist,), jnp.int32)
 
     # --- storage hooks (overridden by IVFPQIndex) ---------------------
-    def _empty_payload_host(self):
-        return np.zeros((0, self.dim), np.float32)
-
     def _empty_payload_dev(self, cap: int):
         return jnp.zeros((self.cfg.nlist, cap, self.dim), jnp.float32)
 
     def _encode_payload_dev(self, vectors, assign):   # noqa: ARG002
         return vectors
-
-    def _score_candidates(self, queries, payload, cand_lists):
-        """Host layout: queries [B, d]; payload [B, C, ...]; cand_lists
-        [B, C].  Recompiles per candidate width C — the documented cost
-        of the legacy layout."""
-        del cand_lists
-        return _dot_scores(jnp.asarray(queries, jnp.float32),
-                           jnp.asarray(payload))
 
     def _search_csr(self, q, nprobe: int, k: int):
         return _search_flat_csr(q, self._cent_dev, self._cent_raw_dev,
@@ -300,13 +272,11 @@ class IVFFlatIndex:
     # ------------------------------------------------------------------
     @property
     def ntotal(self) -> int:
-        if self.layout == "host":
-            return sum(x.shape[0] for x in self._list_ids)
         return int(jnp.sum(self._lens))
 
     @property
     def cap(self) -> int:
-        """Current power-of-two per-list capacity bucket (device layout)."""
+        """Current power-of-two per-list capacity bucket."""
         return self._cap
 
     @property
@@ -341,8 +311,7 @@ class IVFFlatIndex:
     def _assign_cells(self, vectors):
         """Nearest cell on the unit sphere -> [n] int32.  With unit
         centroids, argmin ||v_hat - c||^2 == argmax <v, c> (each row's
-        norm is a per-row constant), so assignment is one matmul.
-        Shared by both layouts so they build identical lists."""
+        norm is a per-row constant), so assignment is one matmul."""
         return jnp.argmax(vectors @ self._cent_dev.T, axis=1).astype(
             jnp.int32)
 
@@ -358,13 +327,6 @@ class IVFFlatIndex:
         ids = self._check_ids(ids)
         if ids.size == 0:
             return
-        if self.layout == "host":
-            for l in range(self.cfg.nlist):
-                keep = ~np.isin(self._list_ids[l], ids)
-                if not keep.all():
-                    self._list_ids[l] = self._list_ids[l][keep]
-                    self._list_payload[l] = self._list_payload[l][keep]
-            return
         self._ids_dev, self._payload_dev, self._lens = _csr_remove(
             self._ids_dev, self._payload_dev, self._lens,
             jnp.asarray(ids, jnp.int32))
@@ -374,8 +336,7 @@ class IVFFlatIndex:
         (silent truncation would corrupt search results and could even
         collide with PAD_ID)."""
         ids = np.asarray(ids, np.int64)
-        if self.layout == "device" and ids.size and (
-                ids.max() >= 2 ** 31 or ids.min() < 0):
+        if ids.size and (ids.max() >= 2 ** 31 or ids.min() < 0):
             raise ValueError("device layout requires ids in [0, 2**31)")
         return ids
 
@@ -386,16 +347,6 @@ class IVFFlatIndex:
         self.remove(ids)
         vecs = jnp.asarray(vectors, jnp.float32)
         assign = self._assign_cells(vecs)
-        if self.layout == "host":
-            assign_h = np.asarray(assign)
-            payload = np.asarray(self._encode_payload_dev(vecs, assign))
-            for l in np.unique(assign_h):
-                sel = assign_h == l
-                self._list_ids[l] = np.concatenate(
-                    [self._list_ids[l], ids[sel]])
-                self._list_payload[l] = np.concatenate(
-                    [self._list_payload[l], payload[sel]])
-            return
         counts = np.bincount(np.asarray(assign), minlength=self.cfg.nlist)
         needed = int((np.asarray(self._lens) + counts).max())
         if needed > self._cap:
@@ -406,8 +357,6 @@ class IVFFlatIndex:
             jnp.asarray(ids, jnp.int32), payload)
 
     def search(self, queries, k: int):
-        if self.layout == "host":
-            return self._search_host(queries, k)
         q = jnp.asarray(queries, jnp.float32)
         nprobe = min(self.cfg.nprobe, self.cfg.nlist)
         k_eff = min(k, nprobe * self._cap)
@@ -419,66 +368,36 @@ class IVFFlatIndex:
                          constant_values=PAD_ID)
         return s, ids
 
-    # --- legacy host layout ------------------------------------------
-    def _probe_host(self, queries):
-        """Top-nprobe cells per query by cfg.metric (host numpy)."""
-        if self.cfg.metric not in ("l2", "ip"):       # match the device path
-            raise ValueError(f"unknown probe metric: {self.cfg.metric!r}")
-        cent = (self.centroids if self.cfg.metric == "l2"
-                else self.centroids_raw)
-        aff = np.asarray(queries, np.float32) @ cent.T
-        nprobe = min(self.cfg.nprobe, self.cfg.nlist)
-        return np.argsort(-aff, axis=1)[:, :nprobe]        # [B, nprobe]
-
-    def _search_host(self, queries, k: int):
-        queries = np.asarray(queries, np.float32)
-        probes = self._probe_host(queries)                 # [B, nprobe]
-        B = queries.shape[0]
-        per_q_ids, per_q_payload, per_q_lists = [], [], []
-        for b in range(B):
-            lists = probes[b]
-            per_q_ids.append(np.concatenate(
-                [self._list_ids[l] for l in lists]))
-            per_q_payload.append(np.concatenate(
-                [self._list_payload[l] for l in lists]))
-            per_q_lists.append(np.concatenate(
-                [np.full(self._list_ids[l].shape[0], l, np.int32)
-                 for l in lists]))
-        C = max(1, max(x.shape[0] for x in per_q_ids))
-        cand_ids = np.full((B, C), PAD_ID, np.int64)
-        cand_lists = np.zeros((B, C), np.int32)
-        payload = np.zeros((B, C) + per_q_payload[0].shape[1:],
-                           per_q_payload[0].dtype)
-        for b in range(B):
-            n = per_q_ids[b].shape[0]
-            cand_ids[b, :n] = per_q_ids[b]
-            cand_lists[b, :n] = per_q_lists[b]
-            payload[b, :n] = per_q_payload[b]
-        scores = self._score_candidates(queries, payload, cand_lists)
-        return _topk_padded(scores, cand_ids, k)
-
 
 class IVFPQIndex(IVFFlatIndex):
     """IVF + residual product quantization, scored via the Pallas LUT kernel.
 
-    Vectors are encoded as PQ codes of the *residual* x - centroid[cell];
+    Vectors are encoded as uint8 PQ codes of the *residual* x -
+    centroid[cell] (4x less code memory than the pre-PR-4 int32 storage);
     a candidate's score decomposes as <q, centroid[cell]> + LUT-sum over
     its codes (the first term is one [B, nlist] matmul, the second is the
     kernels/pq_scoring.py hot path).
     """
 
     def __init__(self, dim: int, cfg: IVFConfig = IVFConfig(),
-                 pq_cfg: PQConfig = PQConfig(), *, layout: str = "device"):
+                 pq_cfg: PQConfig = PQConfig()):
         self.pq_cfg = pq_cfg
         self.codebook: PQCodebook | None = None
-        super().__init__(dim, cfg, layout=layout)
-
-    def _empty_payload_host(self):
-        return np.zeros((0, self.pq_cfg.n_subvec), np.int32)
+        super().__init__(dim, cfg)
 
     def _empty_payload_dev(self, cap: int):
         return jnp.zeros((self.cfg.nlist, cap, self.pq_cfg.n_subvec),
-                         jnp.int32)
+                         jnp.uint8)
+
+    @property
+    def code_dtype(self):
+        """Storage dtype of one PQ code (uint8 since PR 4)."""
+        return self._payload_dev.dtype
+
+    @property
+    def code_bytes_per_vec(self) -> int:
+        """Bytes of code storage per indexed vector."""
+        return self.pq_cfg.n_subvec * self._payload_dev.itemsize
 
     def _post_train(self, key, vectors, assign):
         residuals = vectors - self._cent_raw_dev[assign]
@@ -495,24 +414,15 @@ class IVFPQIndex(IVFFlatIndex):
                               self.codebook.centers,
                               nprobe=nprobe, k=k, metric=self.cfg.metric)
 
-    def _score_candidates(self, queries, payload, cand_lists):
-        from repro.kernels import ops
-        q = jnp.asarray(queries, jnp.float32)
-        lut = pq_lut(self.codebook, q)                     # [B, M, K]
-        adc = ops.pq_lut_scores(lut, jnp.asarray(payload))  # [B, C]
-        coarse = q @ jnp.asarray(self.centroids_raw).T      # [B, nlist]
-        return adc + jnp.take_along_axis(coarse, jnp.asarray(cand_lists),
-                                         axis=1)
-
 
 def make_index(kind: str, dim: int, *, ivf: IVFConfig = IVFConfig(),
-               pq: PQConfig = PQConfig(), layout: str = "device"):
-    """Factory: 'exact' | 'ivf-flat' | 'ivf-pq'; layout 'device' | 'host'
-    (padded-CSR jitted search vs the legacy ragged-numpy baseline)."""
+               pq: PQConfig = PQConfig()):
+    """Factory: 'exact' | 'ivf-flat' | 'ivf-pq' (IVF kinds are padded-CSR
+    device-resident with a jitted end-to-end search)."""
     if kind == "exact":
         return FlatIndex(dim)
     if kind == "ivf-flat":
-        return IVFFlatIndex(dim, ivf, layout=layout)
+        return IVFFlatIndex(dim, ivf)
     if kind == "ivf-pq":
-        return IVFPQIndex(dim, ivf, pq, layout=layout)
+        return IVFPQIndex(dim, ivf, pq)
     raise ValueError(f"unknown index kind: {kind!r}")

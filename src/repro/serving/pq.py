@@ -1,9 +1,11 @@
 """Product quantization: codebook training, encode/decode, ADC scoring.
 
 A d-dim embedding is split into M subvectors of d/M dims; each subspace gets
-a K-entry codebook trained with k-means, so a vector compresses to M small
-ints (d * 4 bytes -> M bytes at K<=256 — the paper's 1.2M-news corpus drops
-from ~1.2 GB fp32 to ~10 MB).  Query scoring is asymmetric (ADC): the query
+a K-entry codebook trained with k-means, so a vector compresses to M uint8
+codes (d * 4 bytes -> M bytes at the K <= 256 ceiling — the paper's
+1.2M-news corpus drops from ~1.2 GB fp32 to ~10 MB, and the code arrays
+themselves are 4x smaller than the previous int32 storage).  Query scoring
+is asymmetric (ADC): the query
 stays full precision, one [M, K] table of sub-inner-products is built per
 query, and every candidate's score is a LUT gather+sum over its codes —
 the hot loop served by kernels/pq_scoring.py (Pallas) or kernels/ref.py.
@@ -20,8 +22,15 @@ import jax.numpy as jnp
 @dataclasses.dataclass(frozen=True)
 class PQConfig:
     n_subvec: int = 8      # M: subvectors per embedding (d % M == 0)
-    n_codes: int = 32      # K: codebook entries per subspace
+    n_codes: int = 32      # K: codebook entries per subspace (<= 256 so
+    #                        codes pack into uint8)
     train_iters: int = 15  # Lloyd iterations per subspace
+
+    def __post_init__(self):
+        if not 0 < self.n_codes <= 256:
+            raise ValueError(
+                f"n_codes must be in (0, 256] for uint8 codes, "
+                f"got {self.n_codes}")
 
 
 class PQCodebook(NamedTuple):
@@ -70,18 +79,20 @@ def pq_train(key, x, cfg: PQConfig) -> PQCodebook:
 
 @jax.jit
 def pq_encode(cb: PQCodebook, x):
-    """x: [N, d] -> codes [N, M] int32 (nearest codeword per subspace)."""
+    """x: [N, d] -> codes [N, M] uint8 (nearest codeword per subspace;
+    K <= 256 is enforced by PQConfig, so uint8 never wraps)."""
     xs = _split(x, cb.centers.shape[0])                   # [N, M, ds]
     d2 = (jnp.sum(xs * xs, -1)[:, :, None]
           - 2.0 * jnp.einsum("nmd,mkd->nmk", xs, cb.centers)
           + jnp.sum(cb.centers * cb.centers, -1)[None])   # [N, M, K]
-    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
 
 
 @jax.jit
 def pq_decode(cb: PQCodebook, codes):
     """codes: [N, M] -> reconstructed vectors [N, d]."""
-    rec = jnp.take_along_axis(cb.centers[None], codes[:, :, None, None],
+    rec = jnp.take_along_axis(cb.centers[None],
+                              codes[:, :, None, None].astype(jnp.int32),
                               axis=2)[:, :, 0, :]         # [N, M, ds]
     return rec.reshape(codes.shape[0], -1)
 

@@ -9,10 +9,10 @@ true top-k item out of the top-k' — recall@k' is the only knob.
 
 The service owns the full-precision store (global-id -> embedding), the
 main ANN index and the online delta tier; ``publish`` is the single
-entry point for fresh news and triggers threshold compaction.  With the
-default device index layout, stage 1 runs as one jitted padded-CSR
-search per (index kind, cap bucket) — the host work per query() is the
-hybrid merge and the candidate-row gather for stage 2.
+entry point for fresh news and triggers threshold compaction.  Stage 1
+runs as one jitted padded-CSR search per (index kind, cap bucket) — the
+host work per query() is the hybrid merge and the candidate-row gather
+for stage 2.
 """
 from __future__ import annotations
 

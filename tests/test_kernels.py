@@ -136,3 +136,180 @@ def test_buslm_pallas_path_matches_xla_path():
     b = core.buslm_encode(params, cfg, toks, impl="pallas")
     np.testing.assert_allclose(np.array(a), np.array(b),
                                rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# gradient parity: Pallas custom-VJP backward kernels vs XLA autodiff
+# ---------------------------------------------------------------------------
+
+def _grad_tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 1e-4
+
+
+def _assert_grads_close(got, exp, dtype):
+    tol = _grad_tol(dtype)
+    for name, a, b in zip(("dq", "dk", "dv"), got, exp):
+        assert a.dtype == b.dtype, name
+        err = np.max(np.abs(np.asarray(a, np.float32)
+                            - np.asarray(b, np.float32)))
+        assert err <= tol, f"{name} max-abs {err} > {tol}"
+
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D", [
+    (1, 128, 128, 4, 4, 64),      # MHA
+    (2, 128, 128, 8, 2, 32),      # GQA 4:1 (dk/dv reduce over the group)
+    (1, 64, 128, 4, 4, 32),       # Sq != Sk (q_off causal offset)
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_grad_parity(B, Sq, Sk, Hq, Hkv, D, causal, dtype):
+    """jax.grad through ops.flash_attention (custom VJP over the Pallas
+    fwd/bwd kernels) == grad through the XLA reference."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, D), dtype)
+    g = jax.random.normal(ks[3], (B, Sq, Hq, D), dtype)
+
+    def loss(fn):
+        return lambda q, k, v: (fn(q, k, v).astype(jnp.float32)
+                                * g.astype(jnp.float32)).sum()
+
+    got = jax.grad(loss(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=causal, block_q=64, block_k=64)),
+        argnums=(0, 1, 2))(q, k, v)
+    exp = jax.grad(loss(lambda q, k, v: ref.flash_attention(
+        q, k, v, causal=causal)), argnums=(0, 1, 2))(q, k, v)
+    _assert_grads_close(got, exp, dtype)
+
+
+def test_flash_attention_bwd_matches_ref_vjp():
+    """The raw backward kernels against jax.vjp of the reference (cotangent
+    routed through the same output dtype)."""
+    from repro.kernels.flash_attention import (flash_attention_bwd,
+                                               flash_attention_fwd)
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    q = jax.random.normal(ks[0], (2, 128, 4, 32))
+    k = jax.random.normal(ks[1], (2, 128, 2, 32))
+    v = jax.random.normal(ks[2], (2, 128, 2, 32))
+    do = jax.random.normal(ks[3], (2, 128, 4, 32))
+    o, lse = flash_attention_fwd(q, k, v, causal=True, block_q=64,
+                                 block_k=64, interpret=True)
+    got = flash_attention_bwd(q, k, v, o, lse, do, causal=True, block_q=64,
+                              block_k=64, interpret=True)
+    exp = ref.flash_attention_vjp(q, k, v, do, causal=True)
+    _assert_grads_close(got, exp, jnp.float32)
+
+
+@pytest.mark.parametrize("M,K,S,H,D", [
+    (8, 3, 32, 4, 64),     # paper production shape
+    (5, 3, 8, 2, 16),      # odd merged-set size (wrapper pads, not block 1)
+    (12, 2, 16, 2, 32),    # odd multiple of block_m (pads 12 -> 16)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bus_attention_grad_parity(M, K, S, H, D, dtype):
+    """jax.grad through ops.bus_attention == XLA reference grads, including
+    masked padded keys and a fully-masked (padded) segment."""
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    Sk = S + K
+    q = jax.random.normal(ks[0], (M, K, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (M, K, Sk, H, D), dtype)
+    v = jax.random.normal(ks[2], (M, K, Sk, H, D), dtype)
+    mask = jax.random.bernoulli(ks[3], 0.75, (M, K, Sk))
+    mask = mask.at[:, :, 0].set(True)       # CLS always valid
+    mask = mask.at[:, -1, :].set(False)     # one fully-padded segment
+    g = jax.random.normal(ks[4], (M, K, S, H, D), dtype)
+
+    def loss(fn):
+        return lambda q, k, v: (fn(q, k, v).astype(jnp.float32)
+                                * g.astype(jnp.float32)).sum()
+
+    got = jax.grad(loss(lambda q, k, v: ops.bus_attention(
+        q, k, v, mask, block_m=8)), argnums=(0, 1, 2))(q, k, v)
+    exp = jax.grad(loss(lambda q, k, v: ref.bus_attention(q, k, v, mask)),
+                   argnums=(0, 1, 2))(q, k, v)
+    _assert_grads_close(got, exp, dtype)
+
+
+def test_bus_attention_odd_merged_set_is_padded_not_degraded():
+    """Regression: ops.bus_attention used to halve block_m down to 1 for
+    odd M; now it pads M up to the block and masks the tail."""
+    ks = jax.random.split(jax.random.PRNGKey(10), 4)
+    M, K, S, H, D = 11, 3, 8, 2, 16            # prime M
+    Sk = S + K
+    q = jax.random.normal(ks[0], (M, K, S, H, D))
+    k = jax.random.normal(ks[1], (M, K, Sk, H, D))
+    v = jax.random.normal(ks[2], (M, K, Sk, H, D))
+    mask = jax.random.bernoulli(ks[3], 0.8, (M, K, Sk)).at[:, :, 0].set(True)
+    out = ops.bus_attention(q, k, v, mask, block_m=8)
+    assert out.shape == (M, K, S, H, D)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.bus_attention(q, k, v, mask)),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_buslm_grad_parity_pallas_vs_xla():
+    """Acceptance: jax.grad through buslm_encode(impl='pallas') matches the
+    XLA path to <= 1e-4 max-abs, with and without remat."""
+    import dataclasses
+    from repro import core
+    from repro.core.plm import init_plm
+    cfg = core.PLMConfig(vocab=300, n_layers=2, d_model=64, n_heads=4,
+                         d_ff=128, n_segments=3, seg_len=16, news_dim=32)
+    key = jax.random.PRNGKey(11)
+    params = init_plm(key, cfg)
+    toks = jax.random.randint(key, (8, 3, 16), 0, 300)
+    toks = toks.at[0, -1].set(0)            # a fully-padded segment
+
+    def loss(params, cfg, impl):
+        return (core.buslm_encode(params, cfg, toks, impl=impl) ** 2).sum()
+
+    g_xla = jax.grad(loss)(params, cfg, "xla")
+    g_pal = jax.grad(loss)(params, cfg, "pallas")
+    g_remat = jax.grad(loss)(params, dataclasses.replace(cfg, remat=True),
+                             "pallas")
+    for got in (g_pal, g_remat):
+        err = max(jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), got, g_xla)))
+        assert err <= 1e-4, err
+
+
+def test_attention_pallas_fallbacks_preserve_semantics():
+    """The pallas route must never change attention semantics: chunked-
+    local layers keep their window (not silently globalized by the flash
+    kernel) and non-block-divisible lengths fall back instead of hitting
+    the kernel's divisibility assert."""
+    from repro.nn import AttnConfig, attention, init_attention
+    local = AttnConfig(d_model=32, n_heads=2, n_kv=2, head_dim=16,
+                       causal=True, chunk_size=64)
+    params = init_attention(jax.random.PRNGKey(14), local)
+    x = jax.random.normal(jax.random.PRNGKey(15), (1, 128, 32))
+    np.testing.assert_allclose(
+        np.asarray(attention(params, x, local, impl="pallas")),
+        np.asarray(attention(params, x, local, impl="xla")),
+        rtol=1e-5, atol=1e-5)
+
+    odd = AttnConfig(d_model=32, n_heads=2, n_kv=2, head_dim=16, causal=True)
+    x_odd = jax.random.normal(jax.random.PRNGKey(16), (1, 192, 32))
+    np.testing.assert_allclose(
+        np.asarray(attention(params, x_odd, odd, impl="pallas")),
+        np.asarray(attention(params, x_odd, odd, impl="xla")),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_attention_grad_parity_pallas_vs_xla():
+    """Acceptance: jax.grad through nn.attention(impl='pallas') (the flash
+    custom VJP) matches the XLA path to <= 1e-4 max-abs."""
+    from repro.nn import AttnConfig, attention, init_attention
+    cfg = AttnConfig(d_model=64, n_heads=4, n_kv=2, head_dim=16, causal=True)
+    params = init_attention(jax.random.PRNGKey(12), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(13), (2, 128, 64))
+
+    def loss(params, impl):
+        return (attention(params, x, cfg, impl=impl) ** 2).sum()
+
+    g_xla = jax.grad(loss)(params, "xla")
+    g_pal = jax.grad(loss)(params, "pallas")
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_pal, g_xla)))
+    assert err <= 1e-4, err

@@ -1,16 +1,14 @@
-"""Serving subsystem: PQ reconstruction, IVF recall vs exact MIPS, online
-delta/compaction equivalence, Pallas LUT-kernel parity (interpret), and
-the padded-CSR device layout (parity with the legacy host layout across
-add/remove/upsert/compact sequences, compile hygiene per cap bucket,
-probe-metric recall regression, hybrid over-fetch contract)."""
+"""Serving subsystem: PQ reconstruction (uint8 codes), IVF recall vs exact
+MIPS, online delta/compaction equivalence, Pallas LUT-kernel parity
+(interpret), and the padded-CSR device storage (mutation sequences checked
+against an exact-MIPS / code-reconstruction oracle, compile hygiene per
+cap bucket, probe-metric recall regression, hybrid over-fetch contract)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
-
 from repro import serving
 from repro.kernels import ref
 from repro.kernels.pq_scoring import pq_lut_scores as pq_raw
@@ -48,7 +46,7 @@ def test_pq_reconstruction_error_bound():
     cfg = serving.PQConfig(n_subvec=16, n_codes=64)
     cb = serving.pq_train(jax.random.PRNGKey(0), jnp.asarray(x), cfg)
     codes = serving.pq_encode(cb, jnp.asarray(x))
-    assert codes.shape == (1000, 16) and codes.dtype == jnp.int32
+    assert codes.shape == (1000, 16) and codes.dtype == jnp.uint8
     assert int(codes.max()) < cfg.n_codes and int(codes.min()) >= 0
     rec = np.asarray(serving.pq_decode(cb, codes))
     rel = np.linalg.norm(rec - x) / np.linalg.norm(x)
@@ -237,23 +235,23 @@ def test_pq_kernel_masked_matches_xla_reference(shared_v):
     assert np.isfinite(out[~invalid]).all()
 
 
-# ------------------------------------------- padded-CSR vs host layout
-def _build_pair(kind, x, seed=0):
-    """Device- and host-layout twins trained on the same data/key (the
-    spherical partition and PQ codebook come out identical)."""
-    cfg = serving.IVFConfig(nlist=8, nprobe=4)
-    pq_cfg = serving.PQConfig(n_subvec=4, n_codes=16)
-    pair = []
-    for layout in ("device", "host"):
-        idx = serving.make_index(kind, x.shape[1], ivf=cfg, pq=pq_cfg,
-                                 layout=layout)
-        idx.train(jax.random.PRNGKey(seed), jnp.asarray(x))
-        pair.append(idx)
-    return pair
+# ----------------------------------- padded-CSR vs exact/decode oracles
+# (the legacy host layout — and the device/host parity scaffolding that
+# verified it — is gone; mutation correctness is now checked against an
+# exact-MIPS FlatIndex oracle for ivf-flat and a numpy reconstruction of
+# the CSR codes for ivf-pq)
+
+MUTATION_SEQUENCES = [
+    [("add", 120, 60), ("remove", 30, 40), ("upsert", 10, 20),
+     ("compact", 180, 60), ("remove", 200, 39), ("upsert", 100, 50)],
+    [("remove", 0, 120), ("add", 120, 120), ("compact", 0, 120)],
+    [("upsert", 0, 240), ("remove", 100, 60), ("add", 100, 60)],
+]
 
 
 def _apply_ops(idx, ops, x, ids):
-    """Replay an add/remove/upsert/compact sequence onto one index."""
+    """Replay an add/remove/upsert/compact sequence onto one index (the
+    FlatIndex oracle supports the same API: add() is an upsert)."""
     n = x.shape[0]
     for op, start, length in ops:
         lo, hi = start % n, min(start % n + length, n)
@@ -271,54 +269,76 @@ def _apply_ops(idx, ops, x, ids):
             delta.compact_into(idx)
 
 
-def _assert_search_parity(dev, host, q, k, tol):
-    s_d, i_d = dev.search(q, k)
-    s_h, i_h = host.search(q, k)
-    assert dev.ntotal == host.ntotal
-    np.testing.assert_allclose(-np.sort(-s_d, axis=1),
-                               -np.sort(-s_h, axis=1), rtol=tol, atol=tol)
-    for b in range(q.shape[0]):
-        assert set(i_d[b]) == set(i_h[b]), (b, i_d[b], i_h[b])
+def _csr_members(idx):
+    """{id: (cell, slot)} read straight off the device CSR arrays."""
+    ids_dev = np.asarray(idx._ids_dev)
+    lens = np.asarray(idx._lens)
+    out = {}
+    for cell in range(ids_dev.shape[0]):
+        for slot in range(lens[cell]):
+            assert ids_dev[cell, slot] != serving.PAD_ID
+            assert ids_dev[cell, slot] not in out, "duplicate id in lists"
+            out[int(ids_dev[cell, slot])] = (cell, slot)
+    return out
 
 
-def _check_layout_parity(kind, ops, seed=0):
-    x = make_corpus(240, d=16, rank=4, seed=20 + seed)
+@pytest.mark.parametrize("ops", MUTATION_SEQUENCES)
+def test_csr_mutations_match_exact_oracle(ops):
+    """IVF-Flat with exhaustive probing (nprobe == nlist) must agree with
+    an exact-MIPS FlatIndex replaying the same mutation sequence: same
+    membership, same top-k id sets, same scores."""
+    x = make_corpus(240, d=16, rank=4, seed=20)
     ids = np.arange(1, 241)
     q = make_corpus(4, d=16, rank=4, seed=11)
-    dev, host = _build_pair(kind, x, seed=seed)
-    base = [("add", 0, 120)]
-    tol = 1e-4 if kind == "ivf-flat" else 5e-4   # PQ: LUT-sum order differs
-    for idx in (dev, host):
-        _apply_ops(idx, base, x, ids)
-    _assert_search_parity(dev, host, q, 10, tol)
-    for step in ops:
-        for idx in (dev, host):
-            _apply_ops(idx, [step], x, ids)
-    _assert_search_parity(dev, host, q, 10, tol)
+    idx = serving.make_index("ivf-flat", 16,
+                             ivf=serving.IVFConfig(nlist=8, nprobe=8))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    oracle = serving.FlatIndex(16)
+    for target in (idx, oracle):
+        _apply_ops(target, [("add", 0, 120)] + ops, x, ids)
+    assert idx.ntotal == oracle.ntotal
+    assert set(_csr_members(idx)) == set(oracle._ids)
+    s_d, i_d = idx.search(q, 10)
+    s_o, i_o = oracle.search(q, 10)
+    np.testing.assert_allclose(-np.sort(-s_d, axis=1),
+                               -np.sort(-s_o, axis=1), rtol=1e-4, atol=1e-4)
+    for b in range(q.shape[0]):
+        assert set(i_d[b]) == set(i_o[b]), (b, i_d[b], i_o[b])
 
 
-@pytest.mark.parametrize("kind", ["ivf-flat", "ivf-pq"])
-def test_csr_matches_host_layout_fixed_sequences(kind):
-    """Deterministic parity sequences (run even without hypothesis)."""
-    _check_layout_parity(kind, [("add", 120, 60), ("remove", 30, 40),
-                                ("upsert", 10, 20), ("compact", 180, 60),
-                                ("remove", 200, 39), ("upsert", 100, 50)])
-    _check_layout_parity(kind, [("remove", 0, 120), ("add", 120, 120),
-                                ("compact", 0, 120)], seed=1)
+@pytest.mark.parametrize("ops", MUTATION_SEQUENCES)
+def test_csr_pq_search_matches_code_reconstruction(ops):
+    """IVF-PQ exhaustive search must equal the score every stored uint8
+    code row reconstructs to in numpy: <q, cell_mean> + <q, decode(code)>
+    — a direct oracle over the CSR payload content after any mutations."""
+    x = make_corpus(240, d=16, rank=4, seed=21)
+    ids = np.arange(1, 241)
+    q = make_corpus(4, d=16, rank=4, seed=12)
+    idx = serving.make_index(
+        "ivf-pq", 16, ivf=serving.IVFConfig(nlist=8, nprobe=8),
+        pq=serving.PQConfig(n_subvec=4, n_codes=16))
+    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
+    _apply_ops(idx, [("add", 0, 120)] + ops, x, ids)
 
+    members = _csr_members(idx)
+    assert idx._payload_dev.dtype == jnp.uint8           # 4x code memory
+    codes = np.asarray(idx._payload_dev)
+    rows = sorted(members)                               # ids ascending
+    cells = np.array([members[i][0] for i in rows])
+    row_codes = np.stack([codes[members[i]] for i in rows])
+    decoded = np.asarray(serving.pq_decode(idx.codebook,
+                                           jnp.asarray(row_codes)))
+    expected = (q @ idx.centroids_raw[cells].T            # coarse term
+                + q @ decoded.T)                          # [B, n_members]
 
-@settings(max_examples=8, deadline=None, derandomize=True)
-@given(kind=st.sampled_from(["ivf-flat", "ivf-pq"]),
-       ops=st.lists(
-           st.tuples(st.sampled_from(["add", "remove", "upsert", "compact"]),
-                     st.integers(min_value=0, max_value=239),
-                     st.integers(min_value=1, max_value=60)),
-           min_size=1, max_size=4))
-def test_csr_matches_host_layout_property(kind, ops):
-    """Property: padded-CSR search() == legacy host path for any
-    add/remove/upsert/compact sequence (exact for ivf-flat, within PQ
-    float tolerance for ivf-pq)."""
-    _check_layout_parity(kind, ops)
+    k = 10
+    s_d, i_d = idx.search(q, k)
+    order = np.argsort(-expected, axis=1)[:, :k]
+    exp_ids = np.asarray(rows)[order]
+    exp_s = np.take_along_axis(expected, order, axis=1)
+    np.testing.assert_allclose(s_d, exp_s, rtol=1e-4, atol=1e-4)
+    for b in range(q.shape[0]):
+        assert set(i_d[b]) == set(exp_ids[b]), (b, i_d[b], exp_ids[b])
 
 
 @pytest.mark.parametrize("kind", ["ivf-flat", "ivf-pq"])
