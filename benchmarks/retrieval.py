@@ -1,18 +1,23 @@
 """Retrieval benchmark: QPS + recall@k for exact vs IVF-Flat vs IVF-PQ
-over the padded-CSR device-resident indexes.
+over the padded-CSR device-resident indexes, plus the snapshot-lifecycle
+control plane (swap latency, publish latency, query p99 with an
+in-flight background rebuild vs quiescent).
 
 Sweeps corpus sizes, measures batched query throughput and recall@10
 against the exact-MIPS oracle for each index kind (IVF-PQ runs the full
 two-stage pipeline: ANN recall@k' + exact re-rank — the served config)
-and reports PQ code memory (uint8 codes: M bytes per vector).  Timing is
-best-of-N on identical query streams, so kind-vs-kind comparisons hold
-on a noisy box.  (The legacy ragged host-numpy layout this file used to
-baseline against is gone; its deficits — ~3-6x ivf-flat, ~1.1-1.4x
-ivf-pq at equal recall — are recorded in the PR-3 history.)
+and reports PQ code memory (uint8 codes: M bytes per vector).  Every
+build goes through ``IndexBuilder`` and queries go through snapshots /
+``RetrievalService.query`` — the lifecycle API is the only surface this
+file touches.  Timing is best-of-N on identical query streams, so
+kind-vs-kind comparisons hold on a noisy box; the lifecycle latencies
+are distribution numbers (p50/p99 over many calls) for the same reason.
 
 CPU-scale note: on this container the Pallas LUT kernel runs in interpret
 mode, so *absolute* QPS favors the one-einsum exact scan; the numbers to
-read are recall at matched nprobe and the corpus-size scaling trend.
+read are recall at matched nprobe, the corpus-size scaling trend, and —
+for the lifecycle entries — the gap between swap/publish cost and a full
+build (the entire point of moving compaction off the request path).
 
   PYTHONPATH=src python benchmarks/retrieval.py [--sizes 2000 8000]
 
@@ -23,10 +28,9 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import serving
@@ -45,26 +49,29 @@ def recall_at_k(ids, ref_ids):
                           for b in range(ids.shape[0])]))
 
 
+def _builder_for(kind, d, n):
+    nlist = max(8, min(64, n // 64))
+    return serving.IndexBuilder(
+        kind, d, ivf=serving.IVFConfig(nlist=nlist, nprobe=16),
+        pq=serving.PQConfig(n_subvec=16, n_codes=64))
+
+
 def bench_index(kind, x, q, ref_ids, *, k=10, iters=5):
     d = x.shape[1]
     ids = np.arange(1, x.shape[0] + 1)
-    nlist = max(8, min(64, x.shape[0] // 64))
-    pq_cfg = serving.PQConfig(n_subvec=16, n_codes=64)
-    idx = serving.make_index(kind, d,
-                             ivf=serving.IVFConfig(nlist=nlist, nprobe=16),
-                             pq=pq_cfg)
+    builder = _builder_for(kind, d, x.shape[0])
     t0 = time.perf_counter()
-    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
-    idx.add(ids, x)
+    snap = builder.build(ids, x)
     build_s = time.perf_counter() - t0
 
     if kind == "ivf-pq":      # served config: two-stage with exact re-rank
         store = np.zeros((x.shape[0] + 1, d), np.float32)
         store[ids] = x
-        svc = serving.RetrievalService(idx, store, k=k, k_prime=10 * k)
+        svc = serving.RetrievalService(builder, store, k=k, k_prime=10 * k)
+        svc.swap(snap)
         run = lambda: svc.query(q, k)
     else:
-        run = lambda: idx.search(q, k)
+        run = lambda: snap.search(q, k)
 
     run()                     # warm the jitted scorers
     times = []
@@ -76,9 +83,96 @@ def bench_index(kind, x, q, ref_ids, *, k=10, iters=5):
     out = {"kind": kind, "build_s": round(build_s, 3), "qps": round(qps, 1),
            "recall_at_10": recall_at_k(got, ref_ids)}
     if kind == "ivf-pq":
-        out["code_dtype"] = str(idx.code_dtype)
-        out["code_bytes_per_vec"] = idx.code_bytes_per_vec
+        out["code_dtype"] = str(snap.payload.dtype)
+        out["code_bytes_per_vec"] = (snap.payload.shape[-1]
+                                     * snap.payload.dtype.itemsize)
     return out
+
+
+def bench_lifecycle(x, q, *, k=10, swap_iters=200, query_reps=60,
+                    publish_batches=50):
+    """Control-plane latencies for the served (ivf-pq) configuration.
+
+    swap_ms_p50/p99: RetrievalService.swap of a pre-built snapshot — the
+      request-path cost of installing a nightly build (one reference
+      assignment + delta reconciliation).
+    publish_ms_*: service.publish of a 16-row batch with compaction
+      disabled — the O(append) request-path cost (no IVF/PQ inline).
+    query_p99_ms_quiescent vs query_p99_ms_during_rebuild: per-batch
+      query latency with nothing else running vs with a full rebuild
+      (train + bulk add) on a background thread — the p99 a request loop
+      pays while the nightly build is in flight.
+    """
+    d = x.shape[1]
+    n = x.shape[0]
+    ids = np.arange(1, n + 1)
+    builder = _builder_for("ivf-pq", d, n)
+    store = np.zeros((n + 1, d), np.float32)
+    store[ids] = x
+    svc = serving.RetrievalService(builder, store, k=k, k_prime=10 * k,
+                                   compact_threshold=10 ** 9,
+                                   auto_compact=False)
+    snap_a = builder.build(ids, x)
+    snap_b = builder.build(ids, x)
+    svc.swap(snap_a)
+    svc.query(q, k)                                   # warm executables
+
+    swap_ms = []
+    for i in range(swap_iters):
+        t0 = time.perf_counter()
+        svc.swap(snap_b if i % 2 == 0 else snap_a)
+        swap_ms.append((time.perf_counter() - t0) * 1e3)
+
+    rng = np.random.default_rng(3)
+    fresh = rng.normal(size=(16, d)).astype(np.float32)
+    svc.publish(np.arange(n + 1, n + 17), fresh)      # warm the append path
+    publish_ms = []
+    for b in range(publish_batches):
+        fresh_ids = np.arange(n + 1 + 16 * b, n + 17 + 16 * b)
+        t0 = time.perf_counter()
+        svc.publish(fresh_ids, fresh)
+        publish_ms.append((time.perf_counter() - t0) * 1e3)
+
+    # drain the delta before the query windows: both must run over the
+    # same state (main tier only) so the ONLY difference between them is
+    # the background build
+    svc.rebuild(mode="compact", block=True)
+    svc.query(q, k)                                   # warm post-compact
+
+    def timed_queries(reps):
+        lat = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            svc.query(q, k)
+            lat.append((time.perf_counter() - t0) * 1e3)
+        return lat
+
+    quiescent = timed_queries(query_reps)
+
+    stop = threading.Event()
+
+    def rebuild_loop():       # keep a build in flight for the whole window
+        while not stop.is_set():
+            svc.rebuild(mode="full", block=True)
+
+    t = threading.Thread(target=rebuild_loop, daemon=True)
+    t.start()
+    during = timed_queries(query_reps)
+    stop.set()
+    t.join()
+
+    def pct(v, p):
+        return round(float(np.percentile(v, p)), 3)
+
+    return {"kind": "lifecycle", "n": n,
+            "swap_ms_p50": pct(swap_ms, 50), "swap_ms_p99": pct(swap_ms, 99),
+            "publish_ms_p50": pct(publish_ms, 50),
+            "publish_ms_p99": pct(publish_ms, 99),
+            "query_p99_ms_quiescent": pct(quiescent, 99),
+            "query_p99_ms_during_rebuild": pct(during, 99),
+            "query_p50_ms_quiescent": pct(quiescent, 50),
+            "query_p50_ms_during_rebuild": pct(during, 50),
+            "final_version": svc.version}
 
 
 def main():
@@ -95,8 +189,8 @@ def main():
     for n in args.sizes:
         x = make_vectors(n)
         q = make_vectors(args.batch, seed=7)
-        oracle = serving.FlatIndex(x.shape[1])
-        oracle.add(np.arange(1, n + 1), x)
+        oracle = serving.IndexBuilder("exact", x.shape[1]).build(
+            np.arange(1, n + 1), x)
         _, ref_ids = oracle.search(q, args.k)
         for kind in ("exact", "ivf-flat", "ivf-pq"):
             r = {"n": n, **bench_index(kind, x, q, ref_ids, k=args.k,
@@ -105,6 +199,12 @@ def main():
             print(f"n={n:>7} {r['kind']:>9}: qps={r['qps']:>9} "
                   f"recall@10={r['recall_at_10']:.3f} "
                   f"build={r['build_s']}s")
+        r = bench_lifecycle(x, q, k=args.k)
+        results.append(r)
+        print(f"n={n:>7} lifecycle: swap p99={r['swap_ms_p99']}ms "
+              f"publish p99={r['publish_ms_p99']}ms "
+              f"query p99 quiescent={r['query_p99_ms_quiescent']}ms "
+              f"/ during rebuild={r['query_p99_ms_during_rebuild']}ms")
 
     out = pathlib.Path(__file__).parent / "BENCH_retrieval.json"
     out.write_text(json.dumps(

@@ -1,15 +1,21 @@
-"""Serving example: offline index build + two-stage batched recommendation.
+"""Serving example: snapshot-lifecycle index build + two-stage batched
+recommendation.
 
-  PYTHONPATH=src python examples/serve_recommender.py
+  PYTHONPATH=src python examples/serve_recommender.py [--rebuild-mid-loop]
 
 1. encodes the full news corpus with the BusLM news encoder (bulk/offline)
-   and builds the retrieval stack on top (default IVF-PQ: k-means coarse
-   quantizer + residual product quantization, LUT-scored by the Pallas
-   kernel; --index exact|ivf-flat|ivf-pq to switch),
+   and bootstraps the serving lifecycle: publish the corpus, run one full
+   ``IndexBuilder`` build (default IVF-PQ: k-means coarse quantizer +
+   residual product quantization, LUT-scored by the Pallas kernel;
+   --index exact|ivf-flat|ivf-pq to switch), install it by atomic swap,
 2. runs a micro-batched request loop (collect up to --batch requests or
    2 ms): history -> user embedding -> stage-1 ANN recall of k' candidates
-   (main index + fresh-news delta tier) -> stage-2 exact re-rank to top-k,
-3. reports per-request p50/p99 latency (queueing time included).
+   (ONE frozen IndexSnapshot + fresh-news delta view) -> stage-2 exact
+   re-rank to top-k.  With --rebuild-mid-loop, fresh news is published
+   (O(append), nothing encoded inline) and a background full rebuild
+   swaps in mid-loop without blocking a query,
+3. reports per-request p50/p99 latency (queueing time included) and true
+   recall@k against an exact-MIPS oracle on a probe subset.
 """
 from repro.launch import serve
 

@@ -1,8 +1,15 @@
 # Serving & retrieval: ANN indexes (IVF-Flat / IVF-PQ with Pallas LUT
-# scoring), online delta tier, and the two-stage retrieve->re-rank service.
+# scoring) behind a versioned snapshot lifecycle — immutable IndexSnapshot
+# (the one query object), IndexBuilder (full rebuild + off-path compaction),
+# atomic swap, online delta tier, and the two-stage retrieve->re-rank
+# RetrievalService.
+from .builder import IndexBuilder
 from .index import (PAD_ID, FlatIndex, IVFConfig, IVFFlatIndex, IVFPQIndex,
                     make_index)
-from .online import DeltaBuffer, hybrid_search, ingest_from_cache
+from .online import (DeltaBuffer, DeltaView, hybrid_search, ingest_from_cache,
+                     merge_topk_dedup)
 from .pq import (PQCodebook, PQConfig, kmeans, pq_decode, pq_encode, pq_lut,
                  pq_search, pq_train)
-from .service import RetrievalService
+from .service import RetrievalService, ServiceView
+from .snapshot import IndexSnapshot, empty_snapshot, snapshot_from_index
+from .store import EmbeddingStore

@@ -1,0 +1,115 @@
+"""IndexBuilder: batched (re)builds and off-path compaction -> snapshots.
+
+The builder is the only write surface of the ANN tier.  Two products:
+
+  build(ids, emb)            full rebuild — train quantizers (spherical
+                             k-means, PQ codebooks) from scratch and bulk
+                             add; the nightly-build path.
+  compact(snapshot, ids, emb)  absorb fresh rows into an existing build
+                             WITHOUT retraining: materialize a mutable
+                             index aliasing the snapshot's arrays, upsert
+                             (IVF assignment + PQ encode happen here —
+                             never inside publish), re-freeze.
+
+Both return a new immutable ``IndexSnapshot`` carrying the next version
+id; the caller installs it with ``RetrievalService.swap`` (one reference
+assignment).  Compaction is safe on live snapshots because index
+mutation is functional — ``.at[].set``/``jnp.pad`` rebind fresh arrays,
+so the source snapshot keeps serving unchanged results while the build
+runs (optionally on a background thread, see ``RetrievalService.rebuild
+(block=False)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .index import IVFConfig, IVFPQIndex, make_index
+from .pq import PQCodebook, PQConfig
+from .snapshot import KINDS, IndexSnapshot, empty_snapshot, snapshot_from_index
+
+
+class IndexBuilder:
+    """Produces immutable IndexSnapshots for one (kind, dim, config) cell.
+
+    Version ids are minted from a monotone counter, so every snapshot the
+    builder ever produced is totally ordered; ``seed`` fixes the k-means/
+    PQ training key, making rebuilds over identical data deterministic
+    (same cap buckets -> the swapped-in snapshot reuses warm executables).
+    """
+
+    def __init__(self, kind: str, dim: int, *, ivf: IVFConfig = IVFConfig(),
+                 pq: PQConfig = PQConfig(), seed: int = 0):
+        if kind not in KINDS:
+            raise ValueError(f"unknown index kind: {kind!r}")
+        self.kind, self.dim = kind, dim
+        self.ivf, self.pq = ivf, pq
+        self.seed = seed
+        self._versions = itertools.count(1)    # next() is atomic under GIL
+
+    def empty(self) -> IndexSnapshot:
+        """The version-0 sentinel a service starts from."""
+        return empty_snapshot(self.dim)
+
+    def build(self, ids, emb, *, key=None) -> IndexSnapshot:
+        """Full rebuild: train + bulk add -> new snapshot (off-path work)."""
+        ids = np.asarray(ids, np.int64)
+        emb = np.asarray(emb, np.float32)
+        if ids.size == 0:
+            return dataclasses.replace(self.empty(),
+                                       version=next(self._versions))
+        idx = make_index(self.kind, self.dim, ivf=self.ivf, pq=self.pq)
+        key = jax.random.PRNGKey(self.seed) if key is None else key
+        idx.train(key, jnp.asarray(emb))
+        idx.add(ids, emb)
+        return snapshot_from_index(idx, next(self._versions))
+
+    def compact(self, snapshot: IndexSnapshot, ids, emb) -> IndexSnapshot:
+        """Absorb fresh rows into ``snapshot`` without retraining.
+
+        Upsert semantics (a re-published id replaces its stale entry).
+        Falls back to a full ``build`` when the snapshot is the empty
+        sentinel — there are no quantizers to reuse yet.
+        """
+        if snapshot.ntotal == 0:
+            return self.build(ids, emb)
+        ids = np.asarray(ids, np.int64)
+        emb = np.asarray(emb, np.float32)
+        if ids.size == 0:
+            return dataclasses.replace(snapshot,
+                                       version=next(self._versions))
+        idx = self._materialize(snapshot)
+        idx.add(ids, emb)
+        return snapshot_from_index(idx, next(self._versions))
+
+    def _materialize(self, snap: IndexSnapshot):
+        """Mutable index aliasing a snapshot's arrays (cheap: references
+        only — safe because every index mutation rebinds, never writes in
+        place, so the source snapshot stays frozen)."""
+        if snap.kind != self.kind:
+            raise ValueError(
+                f"snapshot kind {snap.kind!r} != builder kind {self.kind!r}")
+        idx = make_index(self.kind, self.dim, ivf=self.ivf, pq=self.pq)
+        if snap.kind == "exact":
+            idx._ids = np.asarray(snap.flat_ids, np.int64)
+            idx._vecs = np.asarray(snap.flat_vecs, np.float32)
+            return idx
+        if snap.list_ids.shape[0] != self.ivf.nlist:
+            raise ValueError(
+                f"snapshot nlist {snap.list_ids.shape[0]} != "
+                f"builder nlist {self.ivf.nlist}")
+        idx._cent_dev = snap.cent_unit
+        idx._cent_raw_dev = snap.cent_raw
+        idx.centroids = np.asarray(snap.cent_unit)
+        idx.centroids_raw = np.asarray(snap.cent_raw)
+        idx._cap = snap.cap
+        idx._ids_dev = snap.list_ids
+        idx._payload_dev = snap.payload
+        idx._lens = snap.lens
+        if isinstance(idx, IVFPQIndex):
+            idx.codebook = PQCodebook(snap.pq_centers)
+        return idx

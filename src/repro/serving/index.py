@@ -12,7 +12,14 @@ share one API:
 
     idx.train(key, vectors)          # fit quantizers (no-op for Flat)
     idx.add(ids, vectors)            # incremental — used by online deltas
+    idx.snapshot(version) -> IndexSnapshot        # frozen, zero-copy
     idx.search(queries, k) -> (scores [B, k], ids [B, k])   np.float32/int64
+
+``search`` routes through ``snapshot()`` (snapshot.py): the immutable
+IndexSnapshot is the ONE query object of the serving tier, and the index
+classes are its builders/mutators.  Outside this package, mutation goes
+through the lifecycle API (IndexBuilder + RetrievalService.publish/
+rebuild/swap), never through add/remove directly.
 
 Storage is device-resident padded CSR: fixed-capacity ``[nlist, cap]``
 id/payload arrays plus per-list lengths, where ``cap`` grows in
@@ -39,6 +46,11 @@ from .pq import PQCodebook, PQConfig, kmeans, pq_encode, pq_lut, pq_train
 
 PAD_ID = -1
 MIN_CAP = 8            # smallest per-list capacity bucket
+
+# Module-level so every flat scan (FlatIndex, delta views, snapshots of any
+# vintage) shares ONE jit cache: a fresh buffer/snapshot at a shape seen
+# before hits the warm executable instead of re-jitting per instance.
+_flat_score = jax.jit(lambda q, v: q @ v.T)
 
 
 def _next_cap(n: int) -> int:
@@ -214,7 +226,6 @@ class FlatIndex:
         self.dim = dim
         self._vecs = np.zeros((0, dim), np.float32)
         self._ids = np.zeros((0,), np.int64)
-        self._score = jax.jit(lambda q, v: q @ v.T)
 
     @property
     def ntotal(self) -> int:
@@ -234,11 +245,13 @@ class FlatIndex:
             [self._vecs, np.asarray(vectors, np.float32)])
         self._ids = np.concatenate([self._ids, np.asarray(ids, np.int64)])
 
+    def snapshot(self, version: int = 0):
+        """Freeze the current state into an immutable IndexSnapshot."""
+        from .snapshot import snapshot_from_index
+        return snapshot_from_index(self, version)
+
     def search(self, queries, k: int):
-        scores = self._score(jnp.asarray(queries, jnp.float32),
-                             jnp.asarray(self._vecs))
-        cand = np.broadcast_to(self._ids, (queries.shape[0], self.ntotal))
-        return _topk_padded(scores, cand, k)
+        return self.snapshot().search(queries, k)
 
 
 class IVFFlatIndex:
@@ -263,11 +276,6 @@ class IVFFlatIndex:
 
     def _encode_payload_dev(self, vectors, assign):   # noqa: ARG002
         return vectors
-
-    def _search_csr(self, q, nprobe: int, k: int):
-        return _search_flat_csr(q, self._cent_dev, self._cent_raw_dev,
-                                self._ids_dev, self._payload_dev, self._lens,
-                                nprobe=nprobe, k=k, metric=self.cfg.metric)
 
     # ------------------------------------------------------------------
     @property
@@ -356,17 +364,14 @@ class IVFFlatIndex:
             self._ids_dev, self._payload_dev, self._lens, assign,
             jnp.asarray(ids, jnp.int32), payload)
 
+    def snapshot(self, version: int = 0):
+        """Freeze the current state into an immutable IndexSnapshot (zero
+        copy: all mutations rebind fresh device arrays)."""
+        from .snapshot import snapshot_from_index
+        return snapshot_from_index(self, version)
+
     def search(self, queries, k: int):
-        q = jnp.asarray(queries, jnp.float32)
-        nprobe = min(self.cfg.nprobe, self.cfg.nlist)
-        k_eff = min(k, nprobe * self._cap)
-        s, ids = self._search_csr(q, nprobe, k_eff)
-        s, ids = np.asarray(s, np.float32), np.asarray(ids, np.int64)
-        if k_eff < k:
-            s = np.pad(s, ((0, 0), (0, k - k_eff)), constant_values=-np.inf)
-            ids = np.pad(ids, ((0, 0), (0, k - k_eff)),
-                         constant_values=PAD_ID)
-        return s, ids
+        return self.snapshot().search(queries, k)
 
 
 class IVFPQIndex(IVFFlatIndex):
@@ -407,12 +412,6 @@ class IVFPQIndex(IVFFlatIndex):
     def _encode_payload_dev(self, vectors, assign):
         residuals = vectors - self._cent_raw_dev[assign]
         return pq_encode(self.codebook, residuals)
-
-    def _search_csr(self, q, nprobe: int, k: int):
-        return _search_pq_csr(q, self._cent_dev, self._cent_raw_dev,
-                              self._ids_dev, self._payload_dev, self._lens,
-                              self.codebook.centers,
-                              nprobe=nprobe, k=k, metric=self.cfg.metric)
 
 
 def make_index(kind: str, dim: int, *, ivf: IVFConfig = IVFConfig(),

@@ -3,9 +3,18 @@
 News arrives continuously (the paper's production feed); rebuilding the IVF
 index per article is not an option.  The delta buffer is the standard
 two-tier answer: fresh embeddings land in a small brute-force tier that is
-scanned exactly on every query, results are merged with the main ANN
-index, and once the buffer crosses a threshold it is *compacted* — bulk
-add()ed into the main index (IVF assignment + PQ encode) and cleared.
+scanned exactly on every query and merged with the main ANN snapshot.
+
+Under the snapshot lifecycle the buffer never touches the live index:
+``publish`` is a pure append here, and the ``IndexBuilder`` absorbs the
+buffered rows off the request path (``RetrievalService.rebuild``).  Each
+``add`` stamps a monotone sequence number; a build records the
+``watermark()`` it absorbed, and the post-swap ``prune(watermark)`` drops
+exactly the absorbed entries — an id re-published *during* the build has
+a newer stamp, stays in the buffer, and keeps overriding the (now stale)
+row the build captured.  Queries see the buffer only through frozen
+``DeltaView``s, taken together with the index snapshot in one reference
+read, so a concurrent swap can never produce a mixed-version result.
 
 Embeddings enter either straight from the training cache
 (``ingest_from_cache`` reads core.cache.CacheState rows the trainer already
@@ -14,25 +23,55 @@ encoder call (``add``).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import NEVER, CacheState
 
-from .index import PAD_ID, FlatIndex
+from .index import PAD_ID, FlatIndex, _flat_score, _topk_padded
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaView:
+    """Frozen view of the delta tier at one instant (ids + embeddings).
+
+    Zero-copy: DeltaBuffer mutation rebinds fresh arrays (FlatIndex
+    add/remove never write in place), so captured references are stable.
+    """
+    ids: np.ndarray          # [n] int64
+    emb: np.ndarray          # [n, d] float32
+
+    def __len__(self) -> int:
+        return int(self.ids.shape[0])
+
+    def search(self, queries, k: int):
+        if len(self) == 0:
+            B = queries.shape[0]
+            return (np.full((B, k), -np.inf, np.float32),
+                    np.full((B, k), PAD_ID, np.int64))
+        scores = _flat_score(jnp.asarray(queries, jnp.float32),
+                             jnp.asarray(self.emb))
+        cand = np.broadcast_to(self.ids, (queries.shape[0], len(self)))
+        return _topk_padded(scores, cand, k)
 
 
 class DeltaBuffer:
     """Brute-force tier for fresh news; id-keyed, newest write wins.
 
     Storage and exact scan are a FlatIndex (whose add() is already an
-    upsert); this class adds the compaction lifecycle on top.
+    upsert); this class adds the sequence-stamped publish/prune lifecycle
+    on top.  ``should_compact`` only signals — compaction itself is the
+    builder's job, off the request path.
     """
 
     def __init__(self, dim: int, *, compact_threshold: int = 512):
         self.dim = dim
         self.compact_threshold = compact_threshold
         self._flat = FlatIndex(dim)
+        self._seq = 0                  # bumps once per add() batch
+        self._id_seq: dict[int, int] = {}
 
     def __len__(self) -> int:
         return self._flat.ntotal
@@ -47,20 +86,47 @@ class DeltaBuffer:
 
     def add(self, ids, emb):
         """Upsert fresh embeddings (re-published ids overwrite in place)."""
+        self._seq += 1
+        ids = np.asarray(ids, np.int64)
         self._flat.add(ids, emb)
+        for i in ids:
+            self._id_seq[int(i)] = self._seq
 
     def search(self, queries, k: int):
         return self._flat.search(queries, k)
+
+    def view(self) -> DeltaView:
+        """Frozen (ids, emb) for the query path."""
+        return DeltaView(self._flat._ids, self._flat._vecs)
+
+    def watermark(self) -> int:
+        """Sequence stamp covering everything currently buffered."""
+        return self._seq
+
+    def prune(self, upto: int):
+        """Drop entries a build with ``watermark() == upto`` absorbed; ids
+        re-published since then carry a newer stamp and stay."""
+        drop = [i for i, s in self._id_seq.items() if s <= upto]
+        if drop:
+            self._flat.remove(np.asarray(drop, np.int64))
+            for i in drop:
+                del self._id_seq[i]
 
     @property
     def should_compact(self) -> bool:
         return len(self) >= self.compact_threshold
 
     def compact_into(self, index):
-        """Move the buffered embeddings into the main index and clear."""
+        """Bulk-add the buffered embeddings into ``index`` and clear.
+
+        Low-level escape hatch (tests, offline tools): production code
+        compacts through IndexBuilder.compact + swap instead, keeping the
+        encode work off the request path.
+        """
         if len(self):
             index.add(self.ids, self.emb)
         self._flat = FlatIndex(self.dim)
+        self._id_seq.clear()
 
 
 def ingest_from_cache(delta: DeltaBuffer, state: CacheState, ids):
@@ -75,13 +141,49 @@ def ingest_from_cache(delta: DeltaBuffer, state: CacheState, ids):
     return int(written.sum())
 
 
-def hybrid_search(index, delta: DeltaBuffer | None, queries, k: int):
-    """Main-index ANN + exact delta scan, merged to one top-k.
+def merge_topk_dedup(scores, ids, k: int):
+    """Row-wise top-k of (scores [B, C], ids [B, C]) with id dedup.
 
-    Ids present in both tiers resolve to the delta score (freshest
-    embedding wins), so a query through (index, delta) equals the query
-    after ``delta.compact_into(index)`` whenever the index scan is
-    exhaustive over the compacted ids.
+    Vectorized replacement for the per-query Python merge loop, with the
+    identical contract: stable descending sort by score, the first (i.e.
+    best-scoring, earliest-column-on-ties) occurrence of each id wins,
+    PAD_ID slots are skipped, and rows holding fewer than k distinct
+    valid ids pad out with (-inf, PAD_ID).
+    """
+    B = scores.shape[0]
+    order = np.argsort(-scores, axis=1, kind="stable")
+    s_sorted = np.take_along_axis(scores, order, axis=1)
+    i_sorted = np.take_along_axis(ids, order, axis=1)
+    # first occurrence per id within each row: stable-sort the id lane —
+    # within an id group the original (descending-score) positions stay
+    # ascending, so a group's first element is exactly the occurrence the
+    # reference loop kept
+    perm = np.argsort(i_sorted, axis=1, kind="stable")
+    sid = np.take_along_axis(i_sorted, perm, axis=1)
+    first = np.ones_like(sid, dtype=bool)
+    first[:, 1:] = sid[:, 1:] != sid[:, :-1]
+    keep = np.empty_like(first)
+    np.put_along_axis(keep, perm, first, axis=1)
+    keep &= i_sorted != PAD_ID
+    rank = np.cumsum(keep, axis=1) - 1            # 0-based rank among kept
+    take = keep & (rank < k)
+    out_s = np.full((B, k), -np.inf, np.float32)
+    out_i = np.full((B, k), PAD_ID, np.int64)
+    rows, cols = np.nonzero(take)
+    out_s[rows, rank[rows, cols]] = s_sorted[rows, cols]
+    out_i[rows, rank[rows, cols]] = i_sorted[rows, cols]
+    return out_s, out_i
+
+
+def hybrid_search(main, delta, queries, k: int):
+    """Main-tier ANN + exact delta scan, merged to one top-k.
+
+    ``main`` is an IndexSnapshot (or anything exposing ``search``);
+    ``delta`` a DeltaView/DeltaBuffer or None.  Ids present in both tiers
+    resolve to the delta score (freshest embedding wins), so a query
+    through (snapshot, delta) equals the query after the builder compacts
+    the delta into the snapshot whenever the main scan is exhaustive over
+    the compacted ids.
 
     The main tier is over-fetched by len(delta): every one of its hits
     that also lives in the delta tier is nulled as stale, so k fresh
@@ -95,30 +197,16 @@ def hybrid_search(index, delta: DeltaBuffer | None, queries, k: int):
     with every publish would recompile it per delta size.
     """
     if delta is None or len(delta) == 0:
-        return index.search(queries, k)
+        return main.search(queries, k)
     k_main = k + len(delta)
     k_main = 1 << (k_main - 1).bit_length()          # pow2: stable jit key
-    s_main, i_main = index.search(queries, k_main)
+    s_main, i_main = main.search(queries, k_main)
     s_d, i_d = delta.search(queries, k)
-    # a main-index hit whose id also lives in the delta tier is stale —
+    # a main-tier hit whose id also lives in the delta tier is stale —
     # the delta (freshest) embedding's score replaces it
     stale = np.isin(i_main, delta.ids)
-    s_main = np.where(stale, -np.inf, s_main)
+    s_main = np.where(stale, -np.inf, s_main).astype(np.float32)
     i_main = np.where(stale, PAD_ID, i_main)
     scores = np.concatenate([s_d, s_main], axis=1)
     ids = np.concatenate([i_d, i_main], axis=1)
-    out_s = np.full((queries.shape[0], k), -np.inf, np.float32)
-    out_i = np.full((queries.shape[0], k), PAD_ID, np.int64)
-    for b in range(queries.shape[0]):
-        order = np.argsort(-scores[b], kind="stable")
-        seen, picked = set(), []
-        for p in order:
-            if ids[b, p] == PAD_ID or int(ids[b, p]) in seen:
-                continue
-            seen.add(int(ids[b, p]))
-            picked.append(p)
-            if len(picked) == k:
-                break
-        out_s[b, :len(picked)] = scores[b, picked]
-        out_i[b, :len(picked)] = ids[b, picked]
-    return out_s, out_i
+    return merge_topk_dedup(scores, ids, k)

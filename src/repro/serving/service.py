@@ -1,4 +1,4 @@
-"""Two-stage retrieval service: ANN recall@k' -> exact re-rank -> top-k.
+"""Two-stage retrieval service on a versioned index-snapshot lifecycle.
 
 The production pattern (paper §5.1.4): stage 1 asks the compressed/ANN
 tier for k' >> k candidates (cheap, approximate); stage 2 re-scores just
@@ -7,78 +7,218 @@ those k' with the full-precision embeddings the encoder already produced
 candidate set.  Quantization error then only matters when it pushes a
 true top-k item out of the top-k' — recall@k' is the only knob.
 
-The service owns the full-precision store (global-id -> embedding), the
-main ANN index and the online delta tier; ``publish`` is the single
-entry point for fresh news and triggers threshold compaction.  Stage 1
-runs as one jitted padded-CSR search per (index kind, cap bucket) — the
-host work per query() is the hybrid merge and the candidate-row gather
-for stage 2.
+Lifecycle — the ONLY write surface of the serving tier:
+
+    publish(ids, emb)     O(delta append): store grow-and-scatter + delta
+                          tier; never an IVF assignment or PQ encode
+    rebuild(mode=...)     IndexBuilder produces a new IndexSnapshot off
+                          the request path — "full" retrains quantizers
+                          from the store over all live ids, "compact"
+                          absorbs the delta into the current build;
+                          block=False runs it on a background thread
+    swap(snapshot)        atomic install: ONE reference assignment on the
+                          request path; in-flight queries finish on the
+                          snapshot they started with
+    snapshot()            the currently published immutable snapshot
+
+Queries read one frozen ``ServiceView`` (index snapshot + delta view)
+reference and never take a lock, so a rebuild running concurrently with
+the micro-batch loop cannot block a query or leak a mixed-version
+result.  Swapping a rebuild over identical data recompiles nothing: the
+jitted per-(kind, cap bucket) executables key off snapshot shapes.
 """
 from __future__ import annotations
+
+import dataclasses
+import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .index import PAD_ID, _topk_padded
-from .online import DeltaBuffer, hybrid_search
+from .online import DeltaBuffer, DeltaView, hybrid_search
+from .snapshot import IndexSnapshot
+from .store import EmbeddingStore
+
+
+@jax.jit
+def _rerank_scores(q, cand_vecs, valid):
+    s = jnp.einsum("bd,bcd->bc", q, cand_vecs)
+    return jnp.where(valid, s, -jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceView:
+    """Everything one query sees, frozen together: exactly one index
+    snapshot and one delta view — published/retired as a single
+    reference, which is what makes the swap atomic."""
+    snapshot: IndexSnapshot
+    delta: DeltaView
 
 
 class RetrievalService:
-    """index + delta + full-precision re-rank behind one query() call."""
+    """Snapshot lifecycle + delta tier + full-precision re-rank."""
 
-    def __init__(self, index, store_emb, *, k: int = 10,
-                 k_prime: int | None = None,
-                 delta: DeltaBuffer | None = None):
-        """store_emb: [N_global, d] full-precision embeddings keyed by
-        global news id (row 0 = pad news, never a candidate)."""
-        self.index = index
-        self.store_emb = np.asarray(store_emb, np.float32)
+    def __init__(self, builder, store_emb, *, k: int = 10,
+                 k_prime: int | None = None, compact_threshold: int = 512,
+                 auto_compact: bool = True):
+        """builder: IndexBuilder owning (kind, dim, quantizer configs).
+        store_emb: [N_global, d] full-precision embeddings keyed by
+        global news id (row 0 = pad news, never a candidate).
+
+        The service starts on the empty version-0 snapshot; bootstrap by
+        publishing the corpus and calling ``rebuild(mode="full")``, or by
+        swapping in a pre-built snapshot.
+        """
+        self.builder = builder
+        self.store = EmbeddingStore(store_emb)
         self.k = k
         self.k_prime = k_prime or max(4 * k, 32)
-        self.delta = delta
-        self._rerank = jax.jit(self._rerank_fn)
+        self.auto_compact = auto_compact
+        self.delta = DeltaBuffer(builder.dim,
+                                 compact_threshold=compact_threshold)
+        self.n_swaps = 0
+        # _lock serializes WRITERS only (publish / swap / delta prune);
+        # the query path reads self._view once and never locks
+        self._lock = threading.Lock()
+        self._build_lock = threading.Lock()    # one build in flight
+        self._build_thread: threading.Thread | None = None
+        self._view = ServiceView(builder.empty(), self.delta.view())
 
-    @staticmethod
-    def _rerank_fn(q, cand_vecs, valid):
-        s = jnp.einsum("bd,bcd->bc", q, cand_vecs)
-        return jnp.where(valid, s, -jnp.inf)
+    # ------------------------------------------------------------ reads
+    def snapshot(self) -> IndexSnapshot:
+        """The currently published immutable snapshot."""
+        return self._view.snapshot
 
+    @property
+    def version(self) -> int:
+        return self._view.snapshot.version
+
+    @property
+    def ntotal(self) -> int:
+        """Ids served by the main tier (excludes pending delta entries)."""
+        return self._view.snapshot.ntotal
+
+    @property
+    def n_pending(self) -> int:
+        """Delta entries awaiting the next compaction/rebuild."""
+        return len(self._view.delta)
+
+    @property
+    def build_in_flight(self) -> bool:
+        return self._build_lock.locked()
+
+    @property
+    def store_emb(self) -> np.ndarray:
+        """Host view of the full-precision store (alias of store.host)."""
+        return self.store.host
+
+    # ----------------------------------------------------------- writes
     def publish(self, ids, emb):
-        """Fresh news: update the full-precision store, feed the delta
-        tier, compact into the main index past the threshold."""
-        ids = np.asarray(ids, np.int64)
-        emb = np.asarray(emb, np.float32)
-        if ids.size and (ids.min() < 0 or ids.max() >= 2 ** 31):
-            # reject at the entry point: negative ids would silently write
-            # the wrong store row, and ids >= 2**31 would be accepted here
-            # only to wedge every later compaction into the device index
-            # (whose lists store int32 ids)
-            raise ValueError("publish ids must be in [0, 2**31)")
-        if ids.max(initial=-1) >= self.store_emb.shape[0]:
-            grow = int(ids.max()) + 1 - self.store_emb.shape[0]
-            self.store_emb = np.concatenate(
-                [self.store_emb,
-                 np.zeros((grow, self.store_emb.shape[1]), np.float32)])
-        self.store_emb[ids] = emb
-        if self.delta is None:
-            self.index.add(ids, emb)
-            return
-        self.delta.add(ids, emb)
-        if self.delta.should_compact:
-            self.delta.compact_into(self.index)
+        """Fresh news: grow-and-scatter the store, append to the delta
+        tier.  O(append) — IVF assignment / PQ encode never run here;
+        past the threshold a compaction is *scheduled* on a background
+        thread instead (auto_compact=False leaves scheduling to the
+        caller's maintenance loop)."""
+        with self._lock:       # serialize writers; queries never take this
+            ids, emb = self.store.scatter(ids, emb)
+            self.delta.add(ids, emb)
+            self._view = ServiceView(self._view.snapshot, self.delta.view())
+        if self.auto_compact and self.delta.should_compact:
+            self.rebuild(mode="compact", block=False)
 
+    def swap(self, snapshot: IndexSnapshot, *, prune_upto: int | None = None):
+        """Atomically install ``snapshot``.
+
+        The swap the query path observes is ONE reference assignment;
+        queries already running finish on the view they grabbed.  When
+        the snapshot came from a build that absorbed the delta tier,
+        ``prune_upto`` (the builder-side ``delta.watermark()``) drops
+        exactly the absorbed entries first — ids re-published during the
+        build keep their newer rows and continue to override.
+        """
+        with self._lock:
+            if prune_upto is not None:
+                self.delta.prune(prune_upto)
+            self._view = ServiceView(snapshot, self.delta.view())
+            self.n_swaps += 1
+
+    def rebuild(self, *, mode: str = "full", block: bool = True):
+        """Produce a new snapshot off the request path and swap it in.
+
+        mode="full": retrain quantizers from the store over every live id
+        (main-tier members + pending delta) — the nightly build.
+        mode="compact": absorb the delta into the current build without
+        retraining — the threshold compaction.
+
+        block=False runs the build on a daemon thread and returns it (or
+        None if a build is already in flight); the request loop keeps
+        serving the old view until the finished snapshot is swapped in.
+        """
+        if mode not in ("full", "compact"):
+            raise ValueError(f"unknown rebuild mode: {mode!r}")
+        if block:
+            with self._build_lock:
+                return self._build_and_swap(mode)
+        if not self._build_lock.acquire(blocking=False):
+            return None                        # a build is already running
+
+        def _worker():
+            try:
+                self._build_and_swap(mode)
+            finally:
+                self._build_lock.release()
+
+        t = threading.Thread(target=_worker, name="index-rebuild",
+                             daemon=True)
+        self._build_thread = t
+        t.start()
+        return t
+
+    def wait_for_build(self):
+        """Join the most recent background rebuild, if any."""
+        t = self._build_thread
+        if t is not None:
+            t.join()
+
+    def _build_and_swap(self, mode: str):
+        with self._lock:                 # consistent (view, watermark) pair
+            view = self._view
+            watermark = self.delta.watermark()
+        d = view.delta
+        if mode == "compact" and view.snapshot.ntotal > 0:
+            snap = self.builder.compact(view.snapshot, d.ids, d.emb)
+        else:
+            ids = np.union1d(view.snapshot.member_ids,
+                             np.asarray(d.ids, np.int64))
+            snap = self.builder.build(ids, self.store.host[ids])
+        self.swap(snap, prune_upto=watermark)
+        return snap
+
+    # ------------------------------------------------------------ query
     def query(self, user_emb, k: int | None = None):
         """user_emb: [B, d] -> (scores [B, k], ids [B, k]).
 
-        Stage 1: ANN + delta hybrid recall of k' candidate ids.
-        Stage 2: exact re-rank of the candidates in full precision.
+        Stage 1: ANN + delta hybrid recall of k' candidate ids from ONE
+        frozen ServiceView.  Stage 2: exact re-rank in full precision.
         """
-        k = k or self.k
+        k = self.k if k is None else k
+        if k > self.k_prime:
+            raise ValueError(
+                f"query k={k} exceeds k_prime={self.k_prime}: stage 1 only "
+                f"recalls k_prime candidates, so rows beyond it would be "
+                f"silent PAD padding — construct the service with a larger "
+                f"k_prime (or pass a smaller k)")
+        # order matters: grab the view BEFORE the store reference — the
+        # store only grows, so every id the (older) view can return has a
+        # row in the (same-or-newer) store
+        view = self._view
+        store = self.store.host
         q = np.asarray(user_emb, np.float32)
-        _, cand = hybrid_search(self.index, self.delta, q, self.k_prime)
+        _, cand = hybrid_search(view.snapshot, view.delta, q, self.k_prime)
         safe = np.where(cand == PAD_ID, 0, cand)       # row 0 scores nothing
-        cand_vecs = self.store_emb[safe]               # [B, k', d]
-        scores = self._rerank(jnp.asarray(q), jnp.asarray(cand_vecs),
-                              jnp.asarray(cand != PAD_ID))
+        cand_vecs = store[safe]                        # [B, k', d]
+        scores = _rerank_scores(jnp.asarray(q), jnp.asarray(cand_vecs),
+                                jnp.asarray(cand != PAD_ID))
         return _topk_padded(scores, cand, k)

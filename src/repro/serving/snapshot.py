@@ -1,0 +1,141 @@
+"""Immutable, versioned index snapshots — the only object query paths see.
+
+An ``IndexSnapshot`` freezes everything one search needs: the coarse
+quantizer (unit centroids + raw cell means), the PQ codebooks, the
+padded-CSR membership lists, and a monotonically increasing ``version``
+id.  Snapshots are zero-copy: JAX arrays are immutable and every index
+mutation (``_csr_append``/``_csr_remove``/``jnp.pad``) *rebinds* fresh
+arrays instead of writing in place, so capturing references is enough —
+a snapshot's search results can never change after it is taken, no
+matter what the builder does next.
+
+The jitted search executables (``_search_flat_csr`` / ``_search_pq_csr``
+in index.py) key off array *shapes* and static ``(nprobe, k, metric)``,
+not object identity: a rebuilt snapshot that lands in the same
+(kind, cap bucket) reuses the previous snapshot's warm executables, so
+an atomic swap never recompiles the request path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from .index import (PAD_ID, FlatIndex, IVFFlatIndex, IVFPQIndex, _flat_score,
+                    _search_flat_csr, _search_pq_csr, _topk_padded)
+
+KINDS = ("exact", "ivf-flat", "ivf-pq")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSnapshot:
+    """Frozen view of one ANN tier build.
+
+    ``version`` 0 is the pre-first-build sentinel (empty, searches return
+    all-PAD); the builder mints 1, 2, ... for real builds.  Exactly one
+    payload family is populated per kind: ``flat_*`` for "exact",
+    the padded-CSR arrays for the IVF kinds (+ ``pq_centers`` for
+    "ivf-pq").
+    """
+    version: int
+    kind: str
+    dim: int
+    ntotal: int
+    nprobe: int = 0
+    metric: str = "l2"
+    # exact tier (host vectors, device_put per search like FlatIndex)
+    flat_ids: Any = None           # [n] int64 np
+    flat_vecs: Any = None          # [n, d] f32 np
+    # IVF tiers: padded-CSR device arrays
+    cent_unit: Any = None          # [nlist, d] unit centroids
+    cent_raw: Any = None           # [nlist, d] raw cell means
+    list_ids: Any = None           # [nlist, cap] int32
+    payload: Any = None            # [nlist, cap, d] f32 | [nlist, cap, M] u8
+    lens: Any = None               # [nlist] int32
+    pq_centers: Any = None         # [M, K, d/M] PQ codebooks
+
+    @property
+    def cap(self) -> int:
+        """Per-list capacity bucket (0 for the exact/empty kinds)."""
+        return 0 if self.list_ids is None else int(self.list_ids.shape[1])
+
+    @functools.cached_property
+    def member_ids(self) -> np.ndarray:
+        """All ids this snapshot serves, host int64 (feeds full rebuilds)."""
+        if self.kind == "exact" or self.list_ids is None:
+            if self.flat_ids is None:
+                return np.zeros((0,), np.int64)
+            return np.asarray(self.flat_ids, np.int64)
+        ids_h = np.asarray(self.list_ids)
+        lens_h = np.asarray(self.lens)
+        mask = np.arange(ids_h.shape[1])[None, :] < lens_h[:, None]
+        return ids_h[mask].astype(np.int64)
+
+    def search(self, queries, k: int):
+        """(scores [B, k], ids [B, k]) np.float32/int64 — PAD_ID-padded.
+
+        Pure read: dispatches to the shared module-level jitted
+        executables, so every snapshot of the same (kind, cap bucket)
+        hits the same warm cache entry.
+        """
+        B = queries.shape[0]
+        if self.ntotal == 0:
+            return (np.full((B, k), -np.inf, np.float32),
+                    np.full((B, k), PAD_ID, np.int64))
+        q = jnp.asarray(queries, jnp.float32)
+        if self.kind == "exact":
+            scores = _flat_score(q, jnp.asarray(self.flat_vecs))
+            cand = np.broadcast_to(self.flat_ids,
+                                   (B, self.flat_ids.shape[0]))
+            return _topk_padded(scores, cand, k)
+        k_eff = min(k, self.nprobe * self.cap)
+        if self.kind == "ivf-flat":
+            s, ids = _search_flat_csr(
+                q, self.cent_unit, self.cent_raw, self.list_ids,
+                self.payload, self.lens,
+                nprobe=self.nprobe, k=k_eff, metric=self.metric)
+        else:
+            s, ids = _search_pq_csr(
+                q, self.cent_unit, self.cent_raw, self.list_ids,
+                self.payload, self.lens, self.pq_centers,
+                nprobe=self.nprobe, k=k_eff, metric=self.metric)
+        s, ids = np.asarray(s, np.float32), np.asarray(ids, np.int64)
+        if k_eff < k:            # fewer candidates than requested: pad out
+            s = np.pad(s, ((0, 0), (0, k - k_eff)), constant_values=-np.inf)
+            ids = np.pad(ids, ((0, 0), (0, k - k_eff)),
+                         constant_values=PAD_ID)
+        return s, ids
+
+
+def empty_snapshot(dim: int) -> IndexSnapshot:
+    """The version-0 sentinel a service starts from (searches return PAD)."""
+    return IndexSnapshot(version=0, kind="exact", dim=dim, ntotal=0,
+                         flat_ids=np.zeros((0,), np.int64),
+                         flat_vecs=np.zeros((0, dim), np.float32))
+
+
+def snapshot_from_index(idx, version: int) -> IndexSnapshot:
+    """Freeze an index's current state (zero copy — see module docstring).
+
+    The index classes themselves route ``search()`` through here with
+    ``version=0``, so the snapshot IS the one query path.
+    """
+    if isinstance(idx, IVFFlatIndex):             # covers IVFPQIndex too
+        assert idx.is_trained, "snapshot of an untrained IVF index"
+        kind = "ivf-pq" if isinstance(idx, IVFPQIndex) else "ivf-flat"
+        return IndexSnapshot(
+            version=version, kind=kind, dim=idx.dim,
+            ntotal=idx.ntotal,
+            nprobe=min(idx.cfg.nprobe, idx.cfg.nlist),
+            metric=idx.cfg.metric,
+            cent_unit=idx._cent_dev, cent_raw=idx._cent_raw_dev,
+            list_ids=idx._ids_dev, payload=idx._payload_dev, lens=idx._lens,
+            pq_centers=(idx.codebook.centers if kind == "ivf-pq" else None))
+    if isinstance(idx, FlatIndex):
+        return IndexSnapshot(version=version, kind="exact", dim=idx.dim,
+                             ntotal=idx.ntotal,
+                             flat_ids=idx._ids, flat_vecs=idx._vecs)
+    raise TypeError(f"cannot snapshot {type(idx).__name__}")

@@ -1,0 +1,102 @@
+"""Full-precision embedding store: global news id -> row, host + mirror.
+
+One grow-and-scatter surface owned by the service (previously the growth
+/ dedup logic was copy-pasted between ``RetrievalService.publish`` and
+the launcher's ``Recommender.publish``).  The host array backs stage-2
+re-rank and full rebuilds; an optional device mirror (attached by
+serving launchers that encode users on device) receives the SAME deduped
+rows through one jitted row-scatter, so publishing a handful of ids
+never re-uploads the whole [N, d] matrix (transfer-guard tested).
+
+Row 0 is the pad news and stays zero.  Rows only ever grow (growth
+rebinds a fresh array, so older references stay fully valid) or get
+overwritten in place with fresher embeddings.  The overwrite is NOT
+atomic per row: a lock-free query gathering candidates exactly while
+one of its ids is being re-published can read that row half-updated
+(numpy may release the GIL inside a large gather).  This is an accepted
+window — it is bounded to freshly re-published ids, only perturbs one
+stage-2 re-rank score for one query, and self-heals on the next read;
+making it atomic would cost a full store copy per publish, which is
+exactly the O(N) request-path work the lifecycle exists to avoid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def _scatter_rows(mat, ids, rows):
+    """Row-scatter, jitted so only the fresh rows move host->device (an
+    eager .at[].set would also re-stage its scalar constants, which the
+    publish transfer-guard test forbids)."""
+    return mat.at[ids].set(rows)
+
+
+class EmbeddingStore:
+    """[N, d] float32 store keyed by global id, growable, device-mirrored."""
+
+    def __init__(self, emb):
+        self._host = np.array(emb, np.float32)      # owned copy
+        self._dev = None
+
+    def __len__(self) -> int:
+        return self._host.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._host.shape[1]
+
+    @property
+    def host(self) -> np.ndarray:
+        return self._host
+
+    @property
+    def device(self):
+        """Device mirror of the store (attached lazily on first use)."""
+        if self._dev is None:
+            self._dev = jnp.asarray(self._host)
+        return self._dev
+
+    def attach_device_mirror(self):
+        """Upload the store once; later scatters keep the mirror in sync
+        row-by-row."""
+        self._dev = jnp.asarray(self._host)
+        return self._dev
+
+    def scatter(self, ids, rows):
+        """Grow to cover max(ids)+1, then last-write-wins the fresh rows
+        into the host store (and the device mirror, if attached).
+
+        Returns the deduped ``(ids, rows)`` actually written — duplicate
+        ids within one batch resolve to the last occurrence, matching
+        numpy fancy-assignment semantics, so host and mirror can never
+        disagree.
+        """
+        ids = np.asarray(ids, np.int64)
+        rows = np.asarray(rows, np.float32)
+        if ids.size == 0:
+            return ids, rows
+        if ids.min() < 0 or ids.max() >= 2 ** 31:
+            # reject at the entry point: negative ids would silently write
+            # the wrong store row, and ids >= 2**31 would be accepted here
+            # only to wedge every later build into the device index (whose
+            # lists store int32 ids)
+            raise ValueError("publish ids must be in [0, 2**31)")
+        need = int(ids.max()) + 1
+        if need > self._host.shape[0]:
+            grow = need - self._host.shape[0]
+            self._host = np.concatenate(
+                [self._host, np.zeros((grow, self.dim), np.float32)])
+            if self._dev is not None:
+                self._dev = jnp.concatenate(
+                    [self._dev, jnp.zeros((grow, self.dim),
+                                          self._dev.dtype)])
+        uniq, first_rev = np.unique(ids[::-1], return_index=True)
+        rows = rows[::-1][first_rev]
+        self._host[uniq] = rows
+        if self._dev is not None:
+            self._dev = _scatter_rows(self._dev, jax.device_put(uniq),
+                                      jax.device_put(rows))
+        return uniq, rows

@@ -1,9 +1,16 @@
 """Serving subsystem: PQ reconstruction (uint8 codes), IVF recall vs exact
-MIPS, online delta/compaction equivalence, Pallas LUT-kernel parity
-(interpret), and the padded-CSR device storage (mutation sequences checked
-against an exact-MIPS / code-reconstruction oracle, compile hygiene per
-cap bucket, probe-metric recall regression, hybrid over-fetch contract)."""
+MIPS, the versioned IndexSnapshot lifecycle (builder, atomic swap under
+concurrent queries, off-path compaction, delta watermark/prune), online
+delta/compaction equivalence, Pallas LUT-kernel parity (interpret), and
+the padded-CSR device storage (mutation sequences checked against an
+exact-MIPS / code-reconstruction oracle, compile hygiene per cap bucket
+and across swaps, probe-metric recall regression, hybrid over-fetch
+contract).  Index classes are mutated directly only here, where the
+write surface itself is under test — production call sites go through
+the lifecycle API (publish/rebuild/swap)."""
 import dataclasses
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -109,15 +116,15 @@ def test_ivf_flat_recall_at_10(corpus):
 
 
 def test_ivfpq_two_stage_recall_at_10(corpus):
-    """The served configuration: IVF-PQ recall@k' + exact re-rank."""
+    """The served configuration: IVF-PQ recall@k' + exact re-rank, built
+    and installed through the lifecycle API."""
     x, q, ids, ref_ids = corpus
-    idx = serving.make_index("ivf-pq", x.shape[1],
-                             ivf=serving.IVFConfig(nlist=32, nprobe=8))
-    idx.train(jax.random.PRNGKey(0), jnp.asarray(x))
-    idx.add(ids, x)
+    builder = serving.IndexBuilder("ivf-pq", x.shape[1],
+                                   ivf=serving.IVFConfig(nlist=32, nprobe=8))
     store = np.zeros((x.shape[0] + 1, x.shape[1]), np.float32)
     store[ids] = x
-    svc = serving.RetrievalService(idx, store, k=10, k_prime=100)
+    svc = serving.RetrievalService(builder, store, k=10, k_prime=100)
+    svc.swap(builder.build(ids, x))
     _, got = svc.query(q)
     assert recall_at_k(got, ref_ids) >= 0.9
 
@@ -200,20 +207,23 @@ def test_republish_then_compact_does_not_duplicate(corpus):
 
 
 def test_service_publish_compacts_past_threshold(corpus):
+    """Publish stays O(append); crossing the threshold schedules an
+    off-path compaction that absorbs the delta and bumps the version."""
     x, q, ids, _ = corpus
-    idx = serving.make_index("ivf-flat", x.shape[1],
-                             ivf=serving.IVFConfig(nlist=8, nprobe=8))
-    idx.train(jax.random.PRNGKey(0), jnp.asarray(x[:1000]))
-    idx.add(ids[:1000], x[:1000])
+    builder = serving.IndexBuilder("ivf-flat", x.shape[1],
+                                   ivf=serving.IVFConfig(nlist=8, nprobe=8))
     store = np.zeros((x.shape[0] + 1, x.shape[1]), np.float32)
     store[ids[:1000]] = x[:1000]
-    svc = serving.RetrievalService(
-        idx, store, k=10, k_prime=64,
-        delta=serving.DeltaBuffer(x.shape[1], compact_threshold=600))
+    svc = serving.RetrievalService(builder, store, k=10, k_prime=64,
+                                   compact_threshold=600)
+    svc.swap(builder.build(ids[:1000], x[:1000]))
     svc.publish(ids[1000:1500], x[1000:1500])   # below threshold: delta tier
-    assert len(svc.delta) == 500 and idx.ntotal == 1000
+    assert svc.n_pending == 500 and svc.ntotal == 1000
+    v0 = svc.version
     svc.publish(ids[1500:2000], x[1500:2000])   # crosses: compaction fires
-    assert len(svc.delta) == 0 and idx.ntotal == 2000
+    svc.wait_for_build()
+    assert svc.n_pending == 0 and svc.ntotal == 2000
+    assert svc.version > v0
     _, got = svc.query(q)
     assert (got != serving.PAD_ID).all()
 
@@ -486,43 +496,46 @@ def test_hybrid_equals_compaction_under_stale_saturation():
 # ------------------------------------------------- publish scatter path
 def test_publish_scatters_rows_without_full_reupload():
     """Regression (publish H2D storm): publishing a handful of fresh ids
-    must not re-upload the whole [N, d] store to device.  Everything but
-    the explicit device_put of the changed rows runs under a host->device
-    transfer guard."""
-    from repro.launch.serve import Recommender
+    must not re-upload the whole [N, d] store to device.  The service's
+    EmbeddingStore owns the grow-and-scatter for BOTH the host store and
+    the device mirror (previously copy-pasted between service and
+    launcher); everything but the explicit device_put of the changed rows
+    runs under a host->device transfer guard."""
     d, n = 16, 50
     store = np.zeros((n, d), np.float32)
     svc = serving.RetrievalService(
-        serving.FlatIndex(d), store, k=5,
-        delta=serving.DeltaBuffer(d, compact_threshold=10 ** 9))
-    rec = object.__new__(Recommender)       # publish needs only these two
-    rec.service = svc
-    rec._emb = jnp.asarray(store)
-    rec.publish(np.array([3, 7]), np.ones((2, d), np.float32))  # warm
+        serving.IndexBuilder("exact", d), store, k=5,
+        compact_threshold=10 ** 9, auto_compact=False)
+    svc.store.attach_device_mirror()
+    svc.publish(np.array([3, 7]), np.ones((2, d), np.float32))  # warm
     fresh = 2.0 * np.ones((2, d), np.float32)
     with jax.transfer_guard_host_to_device("disallow"):
-        rec.publish(np.array([9, 11]), fresh)
-    np.testing.assert_allclose(np.asarray(rec._emb)[[9, 11]], fresh)
-    np.testing.assert_allclose(np.asarray(rec._emb[3]), np.ones(d))
-    assert rec._emb.shape == (n, d)
-    # growth path: out-of-range ids extend both store and device matrix
-    rec.publish(np.array([n + 2]), 3.0 * np.ones((1, d), np.float32))
-    assert rec.service.store_emb.shape[0] == n + 3
-    assert rec._emb.shape == (n + 3, d)
-    np.testing.assert_allclose(np.asarray(rec._emb[n + 2]), 3.0 * np.ones(d))
+        svc.publish(np.array([9, 11]), fresh)
+    np.testing.assert_allclose(np.asarray(svc.store.device)[[9, 11]], fresh)
+    np.testing.assert_allclose(np.asarray(svc.store.device[3]), np.ones(d))
+    assert svc.store.device.shape == (n, d)
+    # growth path: out-of-range ids extend both store and device mirror
+    svc.publish(np.array([n + 2]), 3.0 * np.ones((1, d), np.float32))
+    assert svc.store_emb.shape[0] == n + 3
+    assert svc.store.device.shape == (n + 3, d)
+    np.testing.assert_allclose(np.asarray(svc.store.device[n + 2]),
+                               3.0 * np.ones(d))
     # a duplicated id within one batch resolves last-write-wins in BOTH
-    # the numpy store and the device matrix (scatter order for duplicate
-    # indices is undefined, so publish dedups before scattering)
+    # the numpy store and the device mirror (scatter order for duplicate
+    # indices is undefined, so the store dedups before scattering)
     dup = np.stack([4.0 * np.ones(d), 5.0 * np.ones(d)]).astype(np.float32)
-    rec.publish(np.array([13, 13]), dup)
-    np.testing.assert_allclose(rec.service.store_emb[13], dup[1])
-    np.testing.assert_allclose(np.asarray(rec._emb[13]), dup[1])
+    svc.publish(np.array([13, 13]), dup)
+    np.testing.assert_allclose(svc.store_emb[13], dup[1])
+    np.testing.assert_allclose(np.asarray(svc.store.device[13]), dup[1])
+    # ...and the delta tier serves the deduped row, not both
+    _, got = svc.query(np.ones((1, d), np.float32), k=5)
+    assert len(set(got[0].tolist())) == 5
     # ids the device index could never hold are rejected at the entry
     # point, not at some later compaction
     with pytest.raises(ValueError, match="2\\*\\*31"):
-        rec.publish(np.array([2 ** 31]), np.ones((1, d), np.float32))
+        svc.publish(np.array([2 ** 31]), np.ones((1, d), np.float32))
     with pytest.raises(ValueError, match="2\\*\\*31"):
-        rec.publish(np.array([-1]), np.ones((1, d), np.float32))
+        svc.publish(np.array([-1]), np.ones((1, d), np.float32))
 
 
 def test_hybrid_overfetch_width_is_quantized():
@@ -549,6 +562,268 @@ def test_hybrid_overfetch_width_is_quantized():
         assert (i != serving.PAD_ID).all()
     assert _search_flat_csr._cache_size() == n0, \
         "delta growth within a pow2 bucket minted a new search executable"
+
+
+# ------------------------------------------- snapshot lifecycle (PR 5)
+def _store_for(x, ids):
+    store = np.zeros((int(ids.max()) + 1, x.shape[1]), np.float32)
+    store[ids] = x
+    return store
+
+
+def test_merge_topk_dedup_matches_reference_loop():
+    """The vectorized hybrid merge must equal the per-query Python loop it
+    replaced, exactly, on duplicated / staled / padded candidate sets."""
+
+    def reference(scores, ids, k):        # the pre-vectorization merge loop
+        B = scores.shape[0]
+        out_s = np.full((B, k), -np.inf, np.float32)
+        out_i = np.full((B, k), serving.PAD_ID, np.int64)
+        for b in range(B):
+            order = np.argsort(-scores[b], kind="stable")
+            seen, picked = set(), []
+            for p in order:
+                if ids[b, p] == serving.PAD_ID or int(ids[b, p]) in seen:
+                    continue
+                seen.add(int(ids[b, p]))
+                picked.append(p)
+                if len(picked) == k:
+                    break
+            out_s[b, :len(picked)] = scores[b, picked]
+            out_i[b, :len(picked)] = ids[b, picked]
+        return out_s, out_i
+
+    rng = np.random.default_rng(5)
+    for trial in range(25):
+        B = int(rng.integers(1, 5))
+        C = int(rng.integers(1, 40))
+        k = int(rng.integers(1, 13))
+        ids = rng.integers(1, 15, size=(B, C)).astype(np.int64)  # many dups
+        scores = rng.normal(size=(B, C)).astype(np.float32)
+        scores = (np.round(scores * 4) / 4).astype(np.float32)   # force ties
+        stale = rng.random(size=(B, C)) < 0.3      # nulled main-tier hits
+        ids = np.where(stale, serving.PAD_ID, ids)
+        scores = np.where(stale, -np.inf, scores).astype(np.float32)
+        sunk = rng.random(size=(B, C)) < 0.1       # valid id, -inf score
+        scores = np.where(sunk, -np.inf, scores).astype(np.float32)
+        got_s, got_i = serving.merge_topk_dedup(scores, ids, k)
+        exp_s, exp_i = reference(scores, ids, k)
+        np.testing.assert_array_equal(got_i, exp_i, err_msg=f"trial {trial}")
+        np.testing.assert_array_equal(got_s, exp_s, err_msg=f"trial {trial}")
+
+
+def test_query_k_exceeding_k_prime_raises():
+    """Regression: query(k > k_prime) used to silently return PAD-padded
+    junk rows beyond the candidate set; now it is a clear error."""
+    builder = serving.IndexBuilder("exact", 8)
+    svc = serving.RetrievalService(builder, np.zeros((4, 8), np.float32),
+                                   k=4, k_prime=8)
+    with pytest.raises(ValueError, match="k_prime"):
+        svc.query(np.zeros((1, 8), np.float32), k=9)
+    svc.query(np.zeros((1, 8), np.float32), k=8)   # k == k_prime is fine
+
+
+def test_snapshot_immutable_across_builder_mutation():
+    """A snapshot's results can never change after it is taken — builder
+    compaction produces a NEW snapshot and leaves the old one frozen."""
+    x = make_corpus(200, d=16, rank=4, seed=30)
+    ids = np.arange(1, 201)
+    q = make_corpus(4, d=16, rank=4, seed=31)
+    for kind in ("exact", "ivf-flat", "ivf-pq"):
+        builder = serving.IndexBuilder(
+            kind, 16, ivf=serving.IVFConfig(nlist=8, nprobe=8),
+            pq=serving.PQConfig(n_subvec=4, n_codes=16))
+        snap1 = builder.build(ids[:120], x[:120])
+        s1, i1 = snap1.search(q, 10)
+        snap2 = builder.compact(snap1, ids[120:], x[120:])
+        assert snap2.version > snap1.version
+        assert snap1.ntotal == 120 and snap2.ntotal == 200
+        s1b, i1b = snap1.search(q, 10)         # old snapshot: bit-identical
+        np.testing.assert_array_equal(i1, i1b)
+        np.testing.assert_array_equal(s1, s1b)
+        assert set(snap2.member_ids) == set(ids.tolist())
+        assert set(snap1.member_ids) == set(ids[:120].tolist())
+
+
+def test_delta_watermark_prune():
+    """A build absorbs the delta up to its watermark; ids re-published
+    during the build keep their newer rows after the prune."""
+    d = 8
+    delta = serving.DeltaBuffer(d, compact_threshold=10 ** 9)
+    delta.add([1, 2, 3], np.ones((3, d), np.float32))
+    wm = delta.watermark()
+    delta.add([4], np.ones((1, d), np.float32))          # after the build cut
+    delta.add([2], 2.0 * np.ones((1, d), np.float32))    # re-published
+    delta.prune(wm)
+    assert set(delta.ids.tolist()) == {2, 4}
+    row2 = delta.emb[delta.ids.tolist().index(2)]
+    np.testing.assert_allclose(row2, 2.0 * np.ones(d))   # the NEWER row
+    delta.prune(delta.watermark())
+    assert len(delta) == 0
+
+
+def test_lifecycle_compaction_equivalence(corpus):
+    """Query through (snapshot, delta) == query after the builder compacts
+    the delta and the new snapshot is swapped in (exhaustive probing)."""
+    x, q, ids, _ = corpus
+    n_main = 1800
+    builder = serving.IndexBuilder("ivf-flat", x.shape[1],
+                                   ivf=serving.IVFConfig(nlist=16, nprobe=16))
+    svc = serving.RetrievalService(builder, _store_for(x, ids), k=10,
+                                   k_prime=64, compact_threshold=10 ** 9,
+                                   auto_compact=False)
+    svc.swap(builder.build(ids[:n_main], x[:n_main]))
+    svc.publish(ids[n_main:], x[n_main:])
+    view = svc._view
+    s_h, i_h = serving.hybrid_search(view.snapshot, view.delta, q, 10)
+    v0 = svc.version
+    svc.rebuild(mode="compact", block=True)
+    assert svc.version > v0 and svc.n_pending == 0
+    assert svc.ntotal == x.shape[0]
+    s_c, i_c = svc.snapshot().search(q, 10)
+    np.testing.assert_array_equal(i_h, i_c)
+    np.testing.assert_allclose(s_h, s_c, rtol=1e-5, atol=1e-5)
+
+
+def test_publish_never_builds_on_the_request_thread(corpus):
+    """publish is O(delta append): IVF assignment / PQ encode run on the
+    builder, and past the threshold the compaction happens on a
+    background thread — never on the publishing (request) thread."""
+    x, q, ids, _ = corpus
+    build_threads = []
+    orig = serving.IndexBuilder.compact
+
+    def spy(self, snap, i, e):
+        build_threads.append(threading.get_ident())
+        return orig(self, snap, i, e)
+
+    builder = serving.IndexBuilder(
+        "ivf-pq", x.shape[1], ivf=serving.IVFConfig(nlist=8, nprobe=8),
+        pq=serving.PQConfig(n_subvec=4, n_codes=16))
+    svc = serving.RetrievalService(builder, _store_for(x, ids), k=10,
+                                   k_prime=64, compact_threshold=60)
+    svc.swap(builder.build(ids[:100], x[:100]))
+    try:
+        serving.IndexBuilder.compact = spy
+        svc.publish(ids[100:140], x[100:140])     # below threshold
+        assert not build_threads and svc.n_pending == 40
+        svc.publish(ids[140:180], x[140:180])     # crosses -> background
+        svc.wait_for_build()
+    finally:
+        serving.IndexBuilder.compact = orig
+    assert build_threads, "threshold crossing never scheduled a compaction"
+    assert all(t != threading.get_ident() for t in build_threads), \
+        "compaction ran on the publishing thread"
+    assert svc.n_pending == 0 and svc.ntotal == 180
+    _, got = svc.query(q)
+    assert (got != serving.PAD_ID).all()
+
+
+def test_swap_atomicity_under_concurrent_queries():
+    """Queries racing a swapper thread must return results consistent with
+    exactly one snapshot version — never a mix.  The two versions hold
+    disjoint id ranges, so any mixed-version batch would be caught."""
+    d = 16
+    rng = np.random.default_rng(9)
+    xa = rng.normal(size=(120, d)).astype(np.float32)
+    xb = rng.normal(size=(120, d)).astype(np.float32)
+    ids_a = np.arange(1, 121)
+    ids_b = np.arange(201, 321)
+    q = rng.normal(size=(4, d)).astype(np.float32)
+    builder = serving.IndexBuilder("ivf-flat", d,
+                                   ivf=serving.IVFConfig(nlist=8, nprobe=8))
+    store = np.zeros((321, d), np.float32)
+    store[ids_a] = xa
+    store[ids_b] = xb
+    svc = serving.RetrievalService(builder, store, k=8, k_prime=32,
+                                   auto_compact=False)
+    snap_a = builder.build(ids_a, xa)
+    snap_b = builder.build(ids_b, xb)
+    set_a, set_b = set(ids_a.tolist()), set(ids_b.tolist())
+    for snap in (snap_a, snap_b):         # warm both executables
+        svc.swap(snap)
+        svc.query(q)
+    done = threading.Event()
+
+    def swapper():
+        for i in range(120):
+            svc.swap(snap_a if i % 2 else snap_b)
+            time.sleep(0.001)
+        done.set()
+
+    t = threading.Thread(target=swapper)
+    t.start()
+    n = 0
+    try:
+        while not done.is_set():
+            _, got = svc.query(q)
+            n += 1
+            returned = set(got[got != serving.PAD_ID].tolist())
+            assert returned and (returned <= set_a or returned <= set_b), \
+                f"mixed-version result: {sorted(returned)}"
+    finally:
+        t.join()
+    assert n > 0
+
+
+def test_background_rebuild_never_blocks_or_mixes(corpus):
+    """A full rebuild on a background thread: queries keep answering from
+    the old snapshot until the swap, then from the new one — and the
+    final version serves every published id."""
+    x, q, ids, _ = corpus
+    builder = serving.IndexBuilder("ivf-flat", x.shape[1],
+                                   ivf=serving.IVFConfig(nlist=16, nprobe=16))
+    svc = serving.RetrievalService(builder, _store_for(x, ids), k=10,
+                                   k_prime=64, compact_threshold=10 ** 9,
+                                   auto_compact=False)
+    svc.swap(builder.build(ids[:1000], x[:1000]))
+    svc.publish(ids[1000:], x[1000:])
+    t = svc.rebuild(mode="full", block=False)
+    assert t is not None
+    versions = set()
+    while t.is_alive():
+        versions.add(svc.version)
+        _, got = svc.query(q)
+        assert (got != serving.PAD_ID).all()
+    svc.wait_for_build()
+    assert svc.version == 2 and svc.n_pending == 0
+    assert svc.ntotal == x.shape[0]
+    versions.add(svc.version)
+    assert versions <= {1, 2}
+    # a second concurrent rebuild request while one is in flight is a no-op
+    t1 = svc.rebuild(mode="full", block=False)
+    t2 = svc.rebuild(mode="full", block=False)
+    assert t1 is not None and t2 is None
+    svc.wait_for_build()
+
+
+def test_swap_preserves_warm_executables():
+    """Post-swap queries must hit the warm jitted executables: a rebuild
+    over identical data lands in the same (kind, cap bucket), and the
+    swap + query recompile NOTHING (still exactly one executable per
+    bucket — the PR-3 compile-hygiene contract, now across versions)."""
+    from repro import training
+    x = make_corpus(400, d=16, rank=4, seed=5)
+    ids = np.arange(1, 401)
+    q = make_corpus(8, d=16, rank=4, seed=6)
+    for kind in ("ivf-flat", "ivf-pq"):
+        builder = serving.IndexBuilder(
+            kind, 16, ivf=serving.IVFConfig(nlist=8, nprobe=4),
+            pq=serving.PQConfig(n_subvec=4, n_codes=16), seed=3)
+        svc = serving.RetrievalService(builder, _store_for(x, ids), k=10,
+                                       k_prime=16, auto_compact=False)
+        svc.swap(builder.build(ids, x))
+        svc.query(q)                             # warm the executables
+        cap0 = svc.snapshot().cap
+        fresh = builder.build(ids, x)            # same data, same seed
+        assert fresh.cap == cap0, "rebuild changed the cap bucket"
+        with training.CompileCounter() as cc:
+            svc.swap(fresh)
+            _, got = svc.query(q)
+        assert cc.count == 0, \
+            f"{kind}: post-swap query recompiled {cc.count}x"
+        assert (got != serving.PAD_ID).all()
+        assert svc.version == 2
 
 
 def test_device_layout_rejects_int32_overflow_ids():
