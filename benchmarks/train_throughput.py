@@ -177,6 +177,32 @@ def trainer_loop(cfg, make_batcher, lcfg, *, steps, repeats):
             "mean_loss_last10": round(float(np.mean(res.losses[-10:])), 4)}
 
 
+def obs_overhead_guard(cfg, make_batcher, lcfg, *, steps, repeats,
+                       max_pct=2.0):
+    """Instrumentation-overhead guard: the identical Trainer stream timed
+    with the obs layer enabled vs disabled, best-of-``repeats`` (>= 2)
+    PER SIDE so neither side gets more bites at the noise.  The telemetry
+    tentpole's budget is <= ``max_pct`` steps/s; negative overhead is
+    shared-box noise (the real per-op cost is ~1µs against ~100ms
+    steps)."""
+    from repro import obs
+    reps = max(repeats, 2)
+    obs.set_enabled(True)
+    on = trainer_loop(cfg, make_batcher, lcfg, steps=steps, repeats=reps)
+    obs.set_enabled(False)
+    try:
+        off = trainer_loop(cfg, make_batcher, lcfg, steps=steps,
+                           repeats=reps)
+    finally:
+        obs.set_enabled(True)
+    overhead = 100.0 * (1.0 - on["steps_per_sec"] / off["steps_per_sec"])
+    return {"enabled_steps_per_sec": on["steps_per_sec"],
+            "disabled_steps_per_sec": off["steps_per_sec"],
+            "overhead_pct": round(overhead, 3),
+            "max_pct": max_pct,
+            "ok": bool(overhead <= max_pct)}
+
+
 def attention_microbench(repeats=3, iters=5, seed=0):
     """Jitted fwd+bwd (value_and_grad) per attention kernel pair on fixed
     inputs, best-of-``repeats`` over ``iters``-call windows. Flash runs the
@@ -228,7 +254,8 @@ def attention_microbench(repeats=3, iters=5, seed=0):
 
 
 def run(epochs=2, repeats=2, seed=0, out=None, seg_len=32,
-        attn_impls=("xla",), micro=True):
+        attn_impls=("xla",), micro=True, obs_overhead=False,
+        obs_overhead_pct=2.0):
     # seg_len=32 -> the 4-bucket set (8, 16, 24, 32): the legacy loop pads
     # every sub-max bucket back to 32, the Trainer runs them at length.
     # The workload is the bucketed regime the paper targets (MIND-like:
@@ -273,6 +300,10 @@ def run(epochs=2, repeats=2, seed=0, out=None, seg_len=32,
         result["legacy_loop"] = legacy
         result["speedup"] = round(
             by_impl["xla"]["steps_per_sec"] / legacy["steps_per_sec"], 3)
+    if obs_overhead:
+        result["obs_overhead"] = obs_overhead_guard(
+            cfgs[first], make_batcher, lcfg, steps=steps,
+            repeats=repeats, max_pct=obs_overhead_pct)
     if micro:
         result["attention_microbench"] = attention_microbench(
             repeats=max(repeats, 2), seed=seed)
@@ -295,13 +326,19 @@ def main():
                          "(each over the identical batch stream)")
     ap.add_argument("--no-micro", action="store_true",
                     help="skip the fwd+bwd attention microbenchmark")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="re-time the Trainer stream with the obs layer "
+                         "disabled and fail if instrumentation costs more "
+                         "than --obs-overhead-pct steps/s")
+    ap.add_argument("--obs-overhead-pct", type=float, default=2.0)
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "BENCH_train.json"))
     args = ap.parse_args()
     result = run(epochs=args.epochs, repeats=args.repeats, seed=args.seed,
                  out=args.out, seg_len=args.seg_len,
                  attn_impls=tuple(dict.fromkeys(args.attn_impl)),
-                 micro=not args.no_micro)
+                 micro=not args.no_micro, obs_overhead=args.obs_overhead,
+                 obs_overhead_pct=args.obs_overhead_pct)
     print(json.dumps(result, indent=2))
     if "legacy_loop" in result:
         print(f"\ntrain_throughput,legacy_steps_per_sec,"
@@ -309,6 +346,12 @@ def main():
         print(f"train_throughput,speedup,{result['speedup']}")
     for impl, r in result["by_attn_impl"].items():
         print(f"train_throughput,{impl}_steps_per_sec,{r['steps_per_sec']}")
+    oh = result.get("obs_overhead")
+    if oh:
+        print(f"train_throughput,obs_overhead_pct,{oh['overhead_pct']}")
+        if not oh["ok"]:     # guard fires AFTER the JSON is written
+            sys.exit(f"obs overhead {oh['overhead_pct']}% exceeds "
+                     f"{oh['max_pct']}% budget")
 
 
 if __name__ == "__main__":

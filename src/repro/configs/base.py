@@ -99,11 +99,36 @@ def batch_sds(mesh, tree_shapes):
     return out
 
 
+_nonfinite_warned: set = set()
+
+
 def finite_metrics(metrics) -> dict:
+    """Device metrics -> host floats, with NaN/Inf detection routed into
+    the obs layer: every non-finite scalar bumps
+    ``nonfinite_metrics_total{key=...}`` and warns ONCE per key per
+    process (divergence shows up in the exported registry instead of
+    scrolling past in a log)."""
+    import math
+    import warnings
+
+    from repro import obs
+
     out = {}
     for k, v in metrics.items():
         v = jax.device_get(v)
-        out[k] = float(v) if getattr(v, "ndim", 0) == 0 else v
+        if getattr(v, "ndim", 0) == 0:
+            f = float(v)
+            if not math.isfinite(f):
+                obs.counter("nonfinite_metrics_total", key=k).inc()
+                if k not in _nonfinite_warned:
+                    _nonfinite_warned.add(k)
+                    warnings.warn(
+                        f"non-finite metric {k!r} = {f} (warning once; "
+                        f"see nonfinite_metrics_total{{key=\"{k}\"}})",
+                        RuntimeWarning, stacklevel=2)
+            out[k] = f
+        else:
+            out[k] = v
     return out
 
 

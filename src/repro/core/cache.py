@@ -39,9 +39,11 @@ class CacheState(NamedTuple):
 class CachePlan(NamedTuple):
     enc_pos: jax.Array     # [E] positions into the merged set to encode
     enc_valid: jax.Array   # [E] bool — slot actually needs encoding
-    reuse: jax.Array       # [M] bool — read from cache
+    reuse: jax.Array       # [M] bool — read from cache (a cache *hit*)
     overflow: jax.Array    # scalar — must-encode news beyond the budget
     p_t: jax.Array         # scalar — scheduled lookup rate
+    expired: jax.Array = None   # [M] bool — cached but older than gamma
+    missing: jax.Array = None   # [M] bool — never cached (true miss)
 
 
 def init_cache(cfg: CacheConfig, dtype=jnp.float32) -> CacheState:
@@ -58,11 +60,20 @@ def cache_plan(state: CacheState, news_ids, step, rng,
     M = news_ids.shape[0]
     p_t = 1.0 - jnp.exp(-cfg.beta * step.astype(jnp.float32))
     use_cache = (jax.random.uniform(rng) < p_t) & (cfg.gamma > 0)
-    age = step - state.written_step[news_ids]
+    written = state.written_step[news_ids]
+    age = step - written
     fresh = (age >= 0) & (age <= cfg.gamma)
     is_pad = news_ids == 0
     reuse = use_cache & fresh & ~is_pad
     must_encode = ~reuse & ~is_pad
+    # cache-content accounting from the same age computation (exported by
+    # the training loop as hit/miss/expired counters): an entry is a true
+    # miss when never written, expired when written but past gamma.  Both
+    # are gate-independent (they describe cache state, not the Bernoulli
+    # lookup draw); ``reuse`` is the realized hit.
+    present = written != NEVER
+    expired = present & ~fresh & ~is_pad
+    missing = ~present & ~is_pad
 
     # encode-budget selection: must-encode first (stable order)
     prio = must_encode.astype(jnp.int32)
@@ -72,7 +83,8 @@ def cache_plan(state: CacheState, news_ids, step, rng,
     enc_valid = must_encode[enc_pos]
     n_must = must_encode.sum()
     overflow = jnp.maximum(n_must - E, 0)
-    return CachePlan(enc_pos, enc_valid, reuse, overflow, p_t)
+    return CachePlan(enc_pos, enc_valid, reuse, overflow, p_t,
+                     expired, missing)
 
 
 def assemble_embeddings(state: CacheState, plan: CachePlan, news_ids,

@@ -124,6 +124,12 @@ def speedyfeed_forward(params, cfg: SpeedyFeedConfig, batch, cache: CacheState,
         "encoded": plan.enc_valid.sum(),
         "reused": plan.reuse.sum(),
         "cache_overflow": plan.overflow,
+        # cache hit/miss/expired device scalars (cache.py age math); the
+        # Trainer's MetricsBuffer drain folds them into obs counters —
+        # the paper's headline cache-reuse signal, no extra syncs
+        "cache_hits": plan.reuse.sum(),
+        "cache_misses": plan.missing.sum(),
+        "cache_expired": plan.expired.sum(),
         "data_efficiency": tok_valid / jnp.maximum(enc_tokens.size, 1),
     })
     return StepOut(loss, new_cache, m)

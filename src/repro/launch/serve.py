@@ -17,9 +17,15 @@ snapshot lifecycle):
      mid-loop without blocking a query (--rebuild-mid-loop exercises
      exactly that).  Per-request latency includes time spent queued.
 
+All request-loop numbers flow through the process-wide ``repro.obs``
+registry (``query_latency_ms{phase=queued|e2e}``, ``serve_batch_size``,
+``serve_requests_total``, ...); ``ServeStats`` is a *view* rendered from
+that registry after the loop, and ``--metrics-out`` snapshots the whole
+registry (train + publish + serve, one process = one registry) to JSONL.
+
 Run: python -m repro.launch.serve --requests 64 --batch 16 \
          [--index ivf-pq|ivf-flat|exact] [--nprobe 8] [--k-prime 64] \
-         [--rebuild-mid-loop]
+         [--rebuild-mid-loop] [--train-steps 6] [--metrics-out m.jsonl]
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import core, serving
+from repro import core, obs, serving
 
 
 @dataclasses.dataclass
@@ -47,6 +53,22 @@ class ServeStats:
     ntotal: int = 0
     index_version: int = 0
     n_swaps: int = 0
+
+    @classmethod
+    def from_registry(cls, *, recall_at_k: float, recall_ok: bool,
+                      index_kind: str, ntotal: int) -> "ServeStats":
+        """Render the stats view from the obs registry — the registry is
+        the single source of truth; this object is just the summary the
+        smoke tests and the CLI print consume."""
+        e2e = obs.histogram("query_latency_ms", phase="e2e")
+        return cls(
+            n_requests=int(obs.counter("serve_requests_total").value),
+            n_batches=int(obs.counter("serve_batches_total").value),
+            p50_ms=e2e.percentile(50), p99_ms=e2e.percentile(99),
+            recall_at_k=recall_at_k, recall_ok=recall_ok,
+            index_kind=index_kind, ntotal=ntotal,
+            index_version=int(obs.gauge("index_snapshot_version").value),
+            n_swaps=int(obs.counter("index_swap_total").value))
 
 
 class Recommender:
@@ -139,20 +161,29 @@ class Recommender:
 
 def micro_batch_loop(rec: Recommender, requests, *, max_batch: int,
                      max_wait_ms: float = 2.0, on_batch=None):
-    """Batched request loop; returns per-request latencies + results.
+    """Batched request loop; returns (results, n_batches).
 
     Each request's latency is measured from the moment it entered the
     queue to batch completion, so queueing delay (waiting for earlier
     batches) is part of the number — not one shared batch wall-clock.
+    All timing lands in the obs registry (the old per-request latency
+    list is gone): ``query_latency_ms{phase="queued"}`` (enqueue ->
+    dequeued into a batch), ``{phase="e2e"}`` (enqueue -> batch done),
+    the ``serve_batch_size`` distribution, and request/batch counters.
     ``on_batch(i)`` fires after batch i completes (the rebuild-mid-loop
     smoke publishes fresh news + kicks a background rebuild from it).
     """
     q = queue.Queue()
     for r in requests:
         q.put((time.time(), r))
-    latencies, results = [], []
+    results = []
     n_batches = 0
     L = rec.cfg.hist_len
+    h_queued = obs.histogram("query_latency_ms", phase="queued")
+    h_e2e = obs.histogram("query_latency_ms", phase="e2e")
+    h_bsz = obs.histogram("serve_batch_size")
+    c_req = obs.counter("serve_requests_total")
+    c_batch = obs.counter("serve_batches_total")
     while not q.empty():
         batch, t_enq = [], []
         deadline = time.time() + max_wait_ms / 1e3
@@ -164,20 +195,29 @@ def micro_batch_loop(rec: Recommender, requests, *, max_batch: int,
                 break
             batch.append(r)
             t_enq.append(t0)
+        t_deq = time.time()
+        for t0 in t_enq:
+            h_queued.observe((t_deq - t0) * 1e3)
         hist = np.zeros((max_batch, L), np.int32)
         mask = np.zeros((max_batch, L), bool)
         for i, h in enumerate(batch):
             h = h[-L:]
             hist[i, :len(h)] = h
             mask[i, :len(h)] = True
-        _, ids = rec.recommend(hist, mask)
+        with obs.span("serve_batch"):
+            _, ids = rec.recommend(hist, mask)
         t_done = time.time()
-        latencies.extend([(t_done - t0) * 1e3 for t0 in t_enq])
+        for t0 in t_enq:
+            h_e2e.observe((t_done - t0) * 1e3)
         results.extend(ids[:len(batch)])
         n_batches += 1
+        h_bsz.observe(len(batch))
+        c_req.inc(len(batch))
+        c_batch.inc()
+        obs.tick()
         if on_batch is not None:
             on_batch(n_batches)
-    return latencies, results, n_batches
+    return results, n_batches
 
 
 def measure_recall(rec: Recommender, histories, *, k: int, probe: int = 16):
@@ -224,12 +264,38 @@ def main(argv=None):
     ap.add_argument("--recall-threshold", type=float, default=0.7)
     ap.add_argument("--probe", type=int, default=16,
                     help="probe-subset size for the recall oracle")
+    ap.add_argument("--train-steps", type=int, default=0,
+                    help="run N training steps first and serve the trained "
+                         "params — train, publish, and serve metrics then "
+                         "land in ONE registry snapshot")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append a JSONL registry snapshot here at the end "
+                         "(and periodically if --metrics-every > 0)")
+    ap.add_argument("--metrics-every", type=float, default=0.0,
+                    help="periodic in-loop snapshot cadence, seconds")
     args = ap.parse_args(argv)
 
-    from repro.launch.train import make_loader, small_speedyfeed_config
+    # one launcher run = one registry's worth of numbers (tests invoke
+    # main() in-process; without the reset a second run would report the
+    # first run's counters too)
+    obs.reset()
+    if args.metrics_out:
+        obs.configure_reporter(path=args.metrics_out,
+                               every_s=args.metrics_every or 10.0)
+
+    from repro.launch.train import (make_loader, small_speedyfeed_config,
+                                    train_speedyfeed)
     cfg = small_speedyfeed_config()
-    corpus, log, store, _ = make_loader(cfg)
-    params, _ = core.speedyfeed_state(cfg)
+    corpus, log, store, lcfg = make_loader(cfg)
+    if args.train_steps > 0:
+        res = train_speedyfeed(steps=args.train_steps, cfg=cfg,
+                               log_every=max(args.train_steps // 2, 1))
+        params = res.state.params
+        print(f"trained {res.steps_done} steps before serving "
+              f"(loss {res.losses[-1]:.3f})" if res.losses else
+              f"trained {res.steps_done} steps before serving")
+    else:
+        params, _ = core.speedyfeed_state(cfg)
     rec = Recommender(cfg, params, store, k=args.k, index_kind=args.index,
                       nprobe=args.nprobe, k_prime=args.k_prime,
                       probe_metric=args.probe_metric)
@@ -256,25 +322,21 @@ def main(argv=None):
             rec.publish(fresh_ids, fresh)        # O(append) on this path
             svc.rebuild(mode="full", block=False)  # absorb off-path
 
-    lat, results, n_batches = micro_batch_loop(
+    results, n_batches = micro_batch_loop(
         rec, reqs, max_batch=args.batch, on_batch=on_batch)
     if args.rebuild_mid_loop:
         svc.wait_for_build()
-    lat = np.asarray(lat)
     recall = measure_recall(rec, reqs, k=args.k, probe=args.probe)
-    print(f"{len(lat)} requests in {n_batches} batches; "
-          f"p50={np.percentile(lat, 50):.1f}ms "
-          f"p99={np.percentile(lat, 99):.1f}ms "
+    stats = ServeStats.from_registry(
+        recall_at_k=recall, recall_ok=recall >= args.recall_threshold,
+        index_kind=args.index, ntotal=svc.ntotal)
+    if args.metrics_out:
+        obs.tick(force=True)     # final full-registry snapshot
+    print(f"{stats.n_requests} requests in {stats.n_batches} batches; "
+          f"p50={stats.p50_ms:.1f}ms p99={stats.p99_ms:.1f}ms "
           f"recall@{args.k}={recall:.3f} "
-          f"(v{svc.version}, {svc.n_swaps} swaps)")
-    return ServeStats(len(lat), n_batches, float(np.percentile(lat, 50)),
-                      float(np.percentile(lat, 99)),
-                      recall_at_k=recall,
-                      recall_ok=recall >= args.recall_threshold,
-                      index_kind=args.index,
-                      ntotal=svc.ntotal,
-                      index_version=svc.version,
-                      n_swaps=svc.n_swaps)
+          f"(v{stats.index_version}, {stats.n_swaps} swaps)")
+    return stats
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ import argparse
 
 import numpy as np
 
-from repro import configs, core, data, training
+from repro import configs, core, data, obs, training
 from repro.training import TrainResult  # re-export (legacy import path)
 
 
@@ -84,7 +84,16 @@ def main():
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None,
+                    help="append obs-registry JSONL snapshots here "
+                         "(periodic + one final)")
+    ap.add_argument("--metrics-every", type=float, default=10.0,
+                    help="periodic snapshot cadence, seconds")
     args = ap.parse_args()
+    obs.reset()      # this run's registry export is exactly this run
+    if args.metrics_out:
+        obs.configure_reporter(path=args.metrics_out,
+                               every_s=args.metrics_every)
     if args.arch == "speedyfeed":
         res = train_speedyfeed(steps=args.steps, ckpt_dir=args.ckpt_dir,
                                ckpt_every=args.ckpt_every, seed=args.seed)
@@ -100,6 +109,9 @@ def main():
         arch = configs.get_arch(args.arch)
         print(f"running reduced-config smoke train for {args.arch}")
         print(arch.smoke())
+    if args.metrics_out:
+        obs.tick(force=True)
+        print(f"metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -23,10 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .index import IVFConfig, IVFPQIndex, make_index
 from .pq import PQCodebook, PQConfig
@@ -61,12 +64,14 @@ class IndexBuilder:
         emb = np.asarray(emb, np.float32)
         if ids.size == 0:
             return dataclasses.replace(self.empty(),
-                                       version=next(self._versions))
-        idx = make_index(self.kind, self.dim, ivf=self.ivf, pq=self.pq)
-        key = jax.random.PRNGKey(self.seed) if key is None else key
-        idx.train(key, jnp.asarray(emb))
-        idx.add(ids, emb)
-        return snapshot_from_index(idx, next(self._versions))
+                                       version=next(self._versions),
+                                       built_at=time.time())
+        with obs.span("index_build", kind=self.kind):
+            idx = make_index(self.kind, self.dim, ivf=self.ivf, pq=self.pq)
+            key = jax.random.PRNGKey(self.seed) if key is None else key
+            idx.train(key, jnp.asarray(emb))
+            idx.add(ids, emb)
+        return snapshot_from_index(idx, next(self._versions), time.time())
 
     def compact(self, snapshot: IndexSnapshot, ids, emb) -> IndexSnapshot:
         """Absorb fresh rows into ``snapshot`` without retraining.
@@ -81,10 +86,12 @@ class IndexBuilder:
         emb = np.asarray(emb, np.float32)
         if ids.size == 0:
             return dataclasses.replace(snapshot,
-                                       version=next(self._versions))
-        idx = self._materialize(snapshot)
-        idx.add(ids, emb)
-        return snapshot_from_index(idx, next(self._versions))
+                                       version=next(self._versions),
+                                       built_at=time.time())
+        with obs.span("index_compact", kind=self.kind):
+            idx = self._materialize(snapshot)
+            idx.add(ids, emb)
+        return snapshot_from_index(idx, next(self._versions), time.time())
 
     def _materialize(self, snap: IndexSnapshot):
         """Mutable index aliasing a snapshot's arrays (cheap: references

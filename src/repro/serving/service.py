@@ -31,10 +31,13 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .index import PAD_ID, _topk_padded
 from .online import DeltaBuffer, DeltaView, hybrid_search
@@ -85,6 +88,19 @@ class RetrievalService:
         self._build_lock = threading.Lock()    # one build in flight
         self._build_thread: threading.Thread | None = None
         self._view = ServiceView(builder.empty(), self.delta.view())
+        # lifecycle telemetry: write-path counters are incremented in
+        # place; the state gauges are computed-at-collect off the live
+        # view, so the export is always current and the request path
+        # pays nothing (last-constructed service wins the gauges when a
+        # process holds several, e.g. under tests)
+        self._c_publish = obs.counter("index_publish_total")
+        self._c_swap = obs.counter("index_swap_total")
+        obs.gauge("index_delta_size").set_fn(lambda: len(self._view.delta))
+        obs.gauge("index_snapshot_version").set_fn(
+            lambda: self._view.snapshot.version)
+        obs.gauge("index_staleness_s").set_fn(
+            lambda: max(0.0, time.time() - self._view.snapshot.built_at)
+            if self._view.snapshot.built_at else 0.0)
 
     # ------------------------------------------------------------ reads
     def snapshot(self) -> IndexSnapshot:
@@ -125,6 +141,7 @@ class RetrievalService:
             ids, emb = self.store.scatter(ids, emb)
             self.delta.add(ids, emb)
             self._view = ServiceView(self._view.snapshot, self.delta.view())
+        self._c_publish.inc()
         if self.auto_compact and self.delta.should_compact:
             self.rebuild(mode="compact", block=False)
 
@@ -143,6 +160,7 @@ class RetrievalService:
                 self.delta.prune(prune_upto)
             self._view = ServiceView(snapshot, self.delta.view())
             self.n_swaps += 1
+        self._c_swap.inc()
 
     def rebuild(self, *, mode: str = "full", block: bool = True):
         """Produce a new snapshot off the request path and swap it in.
@@ -183,17 +201,19 @@ class RetrievalService:
             t.join()
 
     def _build_and_swap(self, mode: str):
-        with self._lock:                 # consistent (view, watermark) pair
-            view = self._view
-            watermark = self.delta.watermark()
-        d = view.delta
-        if mode == "compact" and view.snapshot.ntotal > 0:
-            snap = self.builder.compact(view.snapshot, d.ids, d.emb)
-        else:
-            ids = np.union1d(view.snapshot.member_ids,
-                             np.asarray(d.ids, np.int64))
-            snap = self.builder.build(ids, self.store.host[ids])
-        self.swap(snap, prune_upto=watermark)
+        with obs.span("index_rebuild", mode=mode):
+            with self._lock:             # consistent (view, watermark) pair
+                view = self._view
+                watermark = self.delta.watermark()
+            d = view.delta
+            if mode == "compact" and view.snapshot.ntotal > 0:
+                snap = self.builder.compact(view.snapshot, d.ids, d.emb)
+            else:
+                ids = np.union1d(view.snapshot.member_ids,
+                                 np.asarray(d.ids, np.int64))
+                snap = self.builder.build(ids, self.store.host[ids])
+            self.swap(snap, prune_upto=watermark)
+        obs.counter("index_build_total", mode=mode).inc()
         return snap
 
     # ------------------------------------------------------------ query

@@ -56,6 +56,9 @@ class IndexSnapshot:
     payload: Any = None            # [nlist, cap, d] f32 | [nlist, cap, M] u8
     lens: Any = None               # [nlist] int32
     pq_centers: Any = None         # [M, K, d/M] PQ codebooks
+    # wall-clock the builder produced this snapshot (0.0 for the empty
+    # sentinel / legacy paths) — feeds the staleness-age gauge
+    built_at: float = 0.0
 
     @property
     def cap(self) -> int:
@@ -117,7 +120,8 @@ def empty_snapshot(dim: int) -> IndexSnapshot:
                          flat_vecs=np.zeros((0, dim), np.float32))
 
 
-def snapshot_from_index(idx, version: int) -> IndexSnapshot:
+def snapshot_from_index(idx, version: int,
+                        built_at: float = 0.0) -> IndexSnapshot:
     """Freeze an index's current state (zero copy — see module docstring).
 
     The index classes themselves route ``search()`` through here with
@@ -133,9 +137,11 @@ def snapshot_from_index(idx, version: int) -> IndexSnapshot:
             metric=idx.cfg.metric,
             cent_unit=idx._cent_dev, cent_raw=idx._cent_raw_dev,
             list_ids=idx._ids_dev, payload=idx._payload_dev, lens=idx._lens,
-            pq_centers=(idx.codebook.centers if kind == "ivf-pq" else None))
+            pq_centers=(idx.codebook.centers if kind == "ivf-pq" else None),
+            built_at=built_at)
     if isinstance(idx, FlatIndex):
         return IndexSnapshot(version=version, kind="exact", dim=idx.dim,
                              ntotal=idx.ntotal,
-                             flat_ids=idx._ids, flat_vecs=idx._vecs)
+                             flat_ids=idx._ids, flat_vecs=idx._vecs,
+                             built_at=built_at)
     raise TypeError(f"cannot snapshot {type(idx).__name__}")

@@ -21,7 +21,7 @@ import time
 
 import jax
 
-from repro import data
+from repro import data, obs
 
 
 # producer finished cleanly (max_epochs reached, queue drained) — distinct
@@ -58,6 +58,10 @@ class DevicePrefetcher:
         self._error: BaseException | None = None
         self._thread: threading.Thread | None = None
         self.epochs_done = 0
+        # depth of device-ready batches waiting for the step thread: 0 at
+        # steady state means the consumer is input-bound, == depth means
+        # the producer keeps ahead (what double buffering is for)
+        self._g_depth = obs.gauge("prefetch_queue_depth")
 
     def start(self) -> "DevicePrefetcher":
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -86,12 +90,14 @@ class DevicePrefetcher:
                 stats = item.pop("_stats", None)
                 bucket = int(item.pop("_bucket",
                                       (stats or {}).get("seg_len", 0)))
-                arrays = {k: jax.device_put(v, self._device)
-                          for k, v in item.items()}
+                with obs.span("prefetch_h2d"):
+                    arrays = {k: jax.device_put(v, self._device)
+                              for k, v in item.items()}
                 pb = PrefetchedBatch(bucket, arrays, stats, epoch)
                 while not self._stop.is_set():
                     try:
                         self._q.put(pb, timeout=0.1)   # backpressure
+                        self._g_depth.set(self._q.qsize())
                         break
                     except queue.Full:
                         continue
@@ -113,7 +119,9 @@ class DevicePrefetcher:
                 err, self._error = self._error, None
                 raise err
             try:
-                return self._q.get(timeout=0.05)
+                pb = self._q.get(timeout=0.05)
+                self._g_depth.set(self._q.qsize())
+                return pb
             except queue.Empty:
                 if self._finished.is_set() and self._q.empty():
                     if self._error is not None:   # crash is not a clean end:

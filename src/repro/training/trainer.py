@@ -14,13 +14,16 @@ to host only at the checkpoint cadence.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
+import warnings
 
 import jax
 import numpy as np
 
-from repro import checkpoint as ckpt
+from repro import checkpoint as ckpt, obs
 from repro.distributed.straggler import StepTimeMonitor
 
 from .prefetch import STREAM_END, DevicePrefetcher
@@ -28,48 +31,87 @@ from .state import TrainState, restore_state, save_state
 
 _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
 _active_counters: list = []
+_counters_lock = threading.Lock()
 _listener_registered = False
 
 
 def _on_compile(event, duration_secs, **kw):
-    if event == _COMPILE_EVENT:
-        for c in list(_active_counters):
-            c.count += 1
+    if event != _COMPILE_EVENT:
+        return
+    # every backend compile lands in the obs registry regardless of any
+    # active scoped counter — the process-wide compile tally is never lost
+    obs.counter("xla_compile_events_total").inc()
+    obs.histogram("xla_compile_ms").observe(duration_secs * 1e3)
+    with _counters_lock:
+        if _active_counters:
+            _active_counters[-1].count += 1
+
+
+def ensure_compile_listener():
+    """Register the process-wide jax.monitoring compile listener (idempotent;
+    jax.monitoring has no unregister, so exactly one ever exists)."""
+    global _listener_registered
+    if not _listener_registered:
+        jax.monitoring.register_event_duration_secs_listener(_on_compile)
+        _listener_registered = True
 
 
 class CompileCounter:
     """Counts XLA backend compilations while active (jax.monitoring hook).
 
-    The listener registers once per process (jax.monitoring has no
-    unregister) and fans out to the currently-active counters only.
+    Attribution is scoped to the *innermost* active counter: when
+    counters nest, an event increments only the most recently entered
+    one (the old fan-out-to-all behavior double-counted every nested
+    compile in every enclosing counter — e.g. an outer benchmark counter
+    around ``Trainer.step``'s per-bucket first-step counters saw each
+    bucket compile twice).  The stack is global, not thread-local, so a
+    counter also observes compiles issued by other threads (serving's
+    background-rebuild compile hygiene tests rely on this); nesting
+    *across* threads therefore attributes to whichever counter was
+    entered last, which is the documented trade for not losing
+    cross-thread events.  Totals are additionally always routed to the
+    obs registry (``xla_compile_events_total`` / ``xla_compile_ms``).
     """
 
     def __init__(self):
         self.count = 0
 
     def __enter__(self):
-        global _listener_registered
-        if not _listener_registered:
-            jax.monitoring.register_event_duration_secs_listener(_on_compile)
-            _listener_registered = True
-        _active_counters.append(self)
+        ensure_compile_listener()
+        with _counters_lock:
+            _active_counters.append(self)
         return self
 
     def __exit__(self, *exc):
-        _active_counters.remove(self)
+        with _counters_lock:
+            _active_counters.remove(self)
         return False
 
 
 class MetricsBuffer:
     """Accumulates per-step device metric dicts; fetches lazily in one
     device_get per drain so the step loop never blocks on scalars.
-    ``max_pending`` bounds the live device-scalar backlog when the caller
-    never drains explicitly (e.g. ``log_every=0``)."""
 
-    def __init__(self, max_pending: int = 512):
+    ``max_pending`` bounds the live device-scalar backlog when the caller
+    never drains explicitly (e.g. ``log_every=0``).  Every drained scalar
+    is appended to a bounded per-key ``history`` deque (``history_len``
+    entries) so step time-series survive the drain instead of collapsing
+    to the last step; non-scalar entries are kept in ``last`` as host
+    arrays and warned about once per key (they are excluded from history
+    — previously they were dropped without a trace).  ``on_drain`` (if
+    given) receives each drained chunk as a list of host metric dicts —
+    the Trainer uses it to feed the obs registry's cache counters.
+    """
+
+    def __init__(self, max_pending: int = 512, history_len: int = 4096,
+                 on_drain=None):
         self.max_pending = max_pending
+        self.history_len = history_len
+        self._on_drain = on_drain
         self._pending = []
+        self._warned: set = set()
         self.losses: list = []
+        self.history: dict = {}      # key -> deque of host floats
         self.last: dict = {}
 
     def append(self, metrics: dict):
@@ -81,12 +123,58 @@ class MetricsBuffer:
         """Fetch everything accumulated since the last drain; returns the
         most recent step's scalar metrics (host floats)."""
         if self._pending:
+            from repro.configs.base import finite_metrics
             host = jax.device_get(self._pending)
             self._pending = []
-            self.losses.extend(float(m["loss"]) for m in host)
-            self.last = {k: float(v) for k, v in host[-1].items()
-                         if np.ndim(v) == 0}
+            for m in host:
+                for k, v in m.items():
+                    if np.ndim(v) == 0:
+                        dq = self.history.get(k)
+                        if dq is None:
+                            dq = self.history[k] = collections.deque(
+                                maxlen=self.history_len)
+                        dq.append(float(v))
+                    elif k not in self._warned:
+                        self._warned.add(k)
+                        warnings.warn(
+                            f"MetricsBuffer: metric {k!r} is non-scalar "
+                            f"(shape {np.shape(v)}); kept in .last but "
+                            f"excluded from per-step history",
+                            stacklevel=2)
+            self.losses.extend(float(m["loss"]) for m in host
+                               if "loss" in m)
+            # finite_metrics routes NaN/Inf scalars into the obs
+            # nonfinite_metrics_total counter (one-shot warning per key)
+            self.last = finite_metrics(host[-1])
+            if self._on_drain is not None:
+                self._on_drain(host)
         return self.last
+
+
+_CACHE_COUNTER_KEYS = (
+    # per-step device scalars computed from core/cache.py's age math
+    # (pipeline.speedyfeed_forward) -> process counters, the paper's
+    # headline cache-reuse signal
+    ("cache_hits", "cache_hits_total"),
+    ("cache_misses", "cache_misses_total"),
+    ("cache_expired", "cache_expired_total"),
+    ("cache_overflow", "cache_overflow_total"),
+)
+
+
+def _feed_cache_obs(host_metrics: list):
+    """MetricsBuffer drain hook: fold the drained per-step cache scalars
+    into obs counters and refresh the derived hit-rate gauge."""
+    for key, name in _CACHE_COUNTER_KEYS:
+        total = sum(float(m[key]) for m in host_metrics if key in m)
+        if total:
+            obs.counter(name).inc(total)
+    hits = obs.counter("cache_hits_total").value
+    misses = obs.counter("cache_misses_total").value
+    expired = obs.counter("cache_expired_total").value
+    looked = hits + misses + expired
+    if looked:
+        obs.gauge("cache_hit_rate").set(hits / looked)
 
 
 @dataclasses.dataclass
@@ -99,6 +187,9 @@ class TrainResult:
     compile_counts: dict = dataclasses.field(default_factory=dict)
     bucket_steps: dict = dataclasses.field(default_factory=dict)
     host_stall_fraction: float = 0.0
+    # final TrainState (device arrays) — lets a downstream launcher serve
+    # the trained params without re-threading the Trainer instance
+    state: object = None
 
 
 class Trainer:
@@ -120,6 +211,10 @@ class Trainer:
         self.compile_counts: dict = {}    # bucket -> backend compiles
         self.bucket_steps: dict = {}      # bucket -> steps run
         self.monitor: StepTimeMonitor | None = None   # set by fit()
+        self.last_state: TrainState | None = None     # final state of fit()
+        # compile events flow into the obs registry for every fit, not
+        # only while a CompileCounter is explicitly active
+        ensure_compile_listener()
 
     # -- step ---------------------------------------------------------------
 
@@ -187,13 +282,16 @@ class Trainer:
         prefetcher = DevicePrefetcher(lambda e: make_batcher(e + epoch0),
                                       depth=prefetch_depth).start()
         monitor = StepTimeMonitor(n_hosts=1)
-        buf = MetricsBuffer()
+        buf = MetricsBuffer(on_drain=_feed_cache_obs)
         stall, de_sum, de_n = 0.0, 0.0, 0
         drain_mark, drain_step = time.perf_counter(), step
+        step_hists: dict = {}     # bucket -> train_step_ms histogram
+        step_ctrs: dict = {}      # bucket -> train_steps_total counter
         try:
             while step < steps:
-                tw = time.perf_counter()
-                pb = prefetcher.get(timeout=batch_timeout)
+                t_iter = tw = time.perf_counter()
+                with obs.span("train_host_stall"):
+                    pb = prefetcher.get(timeout=batch_timeout)
                 stall += time.perf_counter() - tw
                 if pb is STREAM_END:       # bounded-epoch source ran dry
                     break
@@ -206,6 +304,18 @@ class Trainer:
                     de_sum += float(pb.stats["data_efficiency"])
                     de_n += 1
                 step += 1
+                # per-step wall at the loop (dispatch + stall; converges to
+                # true step time once the async queue backpressures)
+                hist = step_hists.get(pb.bucket)
+                if hist is None:
+                    b = str(pb.bucket)
+                    hist = step_hists[pb.bucket] = obs.histogram(
+                        "train_step_ms", bucket=b)
+                    step_ctrs[pb.bucket] = obs.counter(
+                        "train_steps_total", bucket=b)
+                hist.observe((time.perf_counter() - t_iter) * 1e3)
+                step_ctrs[pb.bucket].inc()
+                obs.tick()
                 if fail_at is not None and step >= fail_at:
                     raise RuntimeError("injected failure")
                 if ckpt_dir and step % ckpt_every == 0:
@@ -230,10 +340,12 @@ class Trainer:
             if writer:
                 writer.wait()
         self.monitor = monitor
+        self.last_state = state
         final = buf.drain()
         if de_n:      # loader-side Eq. 1 data efficiency (paper Figure 8)
             final["loader_data_efficiency"] = de_sum / de_n
         wall = time.time() - t0
+        obs.gauge("train_host_stall_fraction").set(stall / max(wall, 1e-9))
         # report THIS run's deltas (the Trainer's own counters are
         # cumulative across its lifetime, e.g. warm-up + repeated fits)
         compiles = {k: v - cc0.get(k, 0) for k, v in self.compile_counts
@@ -241,4 +353,5 @@ class Trainer:
         bsteps = {k: v - bs0.get(k, 0) for k, v in self.bucket_steps.items()
                   if v - bs0.get(k, 0) > 0}
         return TrainResult(step, buf.losses, resumed, wall, final,
-                           compiles, bsteps, stall / max(wall, 1e-9))
+                           compiles, bsteps, stall / max(wall, 1e-9),
+                           state=state)
