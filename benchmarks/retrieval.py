@@ -1,27 +1,34 @@
 """Retrieval benchmark: QPS + recall@k for exact vs IVF-Flat vs IVF-PQ
-over the padded-CSR device-resident indexes, plus the snapshot-lifecycle
-control plane (swap latency, publish latency, query p99 with an
-in-flight background rebuild vs quiescent).
+over the padded-CSR device-resident indexes, the snapshot-lifecycle
+control plane (swap latency, publish latency, per-query p50/p99 with an
+in-flight background rebuild vs quiescent), and the scan-shape sweeps
+that picked the kernel/crossover defaults in ``serving/index.py``.
+
+Scale story (the numbers the million-vector build rests on): builds
+train quantizers on a bounded sample with mini-batch k-means, so
+``build_s`` stops growing with ntotal — the n=100k entries record the
+measured build next to ``full_lloyd_extrapolated_s`` (full-corpus
+Lloyd's measured at 8k with the target size's nlist, then extrapolated
+linearly in n — n is the only axis that differs, since Lloyd's
+per-iteration cost is O(n * nlist * d)).  An OPQ entry (``ivf-pq-opq``)
+records the rotation's recall against the plain-PQ baseline.
 
 Sweeps corpus sizes, measures batched query throughput and recall@10
 against the exact-MIPS oracle for each index kind (IVF-PQ runs the full
-two-stage pipeline: ANN recall@k' + exact re-rank — the served config)
-and reports PQ code memory (uint8 codes: M bytes per vector).  Every
-build goes through ``IndexBuilder`` and queries go through snapshots /
-``RetrievalService.query`` — the lifecycle API is the only surface this
-file touches.  Timing is best-of-N on identical query streams, so
-kind-vs-kind comparisons hold on a noisy box; the lifecycle latencies
-are distribution numbers (p50/p99 over many calls) for the same reason.
+two-stage pipeline: ANN recall@k' + exact re-rank — the served config).
+Every build goes through ``IndexBuilder`` and queries go through
+snapshots / ``RetrievalService.query``.  Throughput timing is best-of-N
+on identical query streams; the lifecycle latencies are per-query
+distributions read from the obs ``query_latency_ms{phase=...}``
+histograms, with every executable warmed (one full rebuild + query)
+before the timed windows — wall-clocking cold windows was how the old
+numbers picked up compile time and reported 300ms+ p50s at n=2k.
 
-CPU-scale note: on this container the Pallas LUT kernel runs in interpret
-mode, so *absolute* QPS favors the one-einsum exact scan; the numbers to
-read are recall at matched nprobe, the corpus-size scaling trend, and —
-for the lifecycle entries — the gap between swap/publish cost and a full
-build (the entire point of moving compaction off the request path).
+  PYTHONPATH=src python benchmarks/retrieval.py [--sizes 2000 8000 100000]
+      [--quick] [--no-sweep] [--out PATH]
 
-  PYTHONPATH=src python benchmarks/retrieval.py [--sizes 2000 8000]
-
-Writes BENCH_retrieval.json next to this file.
+1M entry: pass ``--sizes 1000000`` (ivf-pq only above --max-flat-n).
+Writes BENCH_retrieval.json next to this file unless --out is given.
 """
 from __future__ import annotations
 
@@ -33,7 +40,8 @@ import time
 
 import numpy as np
 
-from repro import serving
+from repro import obs, serving
+from repro.serving import index as serving_index
 
 
 def make_vectors(n, d=64, rank=16, seed=0):
@@ -49,17 +57,41 @@ def recall_at_k(ids, ref_ids):
                           for b in range(ids.shape[0])]))
 
 
-def _builder_for(kind, d, n):
-    nlist = max(8, min(64, n // 64))
-    return serving.IndexBuilder(
-        kind, d, ivf=serving.IVFConfig(nlist=nlist, nprobe=16),
-        pq=serving.PQConfig(n_subvec=16, n_codes=64))
+def _shape_for(n):
+    """(nlist, nprobe) per corpus size: the small-n configs match the
+    pre-scale benchmark exactly (so build_s is comparable release to
+    release); past 8k, cells grow toward 1024 and probes widen."""
+    if n <= 8192:
+        return max(8, min(64, n // 64)), 16
+    return min(1024, n // 96), 64
 
 
-def bench_index(kind, x, q, ref_ids, *, k=10, iters=5):
+def _builder_for(kind, d, n, *, opq=False, lloyd=False, shape_n=None):
+    nlist, nprobe = _shape_for(shape_n or n)
+    big = 1 << 30          # lloyd=True: disable sampling AND mini-batch —
+    #                        the full-corpus Lloyd's baseline build
+    # train_batch=4096 puts the fit_kmeans Lloyd/mini-batch dispatch at
+    # 8192 rows: the small-n entries train full Lloyd (same quality as
+    # the pre-scale benchmark), the 100k+ entries go mini-batch on the
+    # 16384-row sample
+    ivf = serving.IVFConfig(
+        nlist=nlist, nprobe=nprobe,
+        train_sample=big if lloyd else 16384,
+        train_batch=big if lloyd else 4096)
+    # PQ codebooks: k=64 per subspace saturates well below the coarse
+    # quantizer's sample needs — 8192 rows (128/centroid) keeps the
+    # subspace fit on the cheaper full-Lloyd dispatch at every size
+    pq = serving.PQConfig(
+        n_subvec=16, n_codes=64, opq_iters=4 if opq else 0,
+        train_sample=big if lloyd else 8192,
+        train_batch=big if lloyd else 4096)
+    return serving.IndexBuilder(kind, d, ivf=ivf, pq=pq)
+
+
+def bench_index(kind, x, q, ref_ids, *, k=10, iters=5, opq=False):
     d = x.shape[1]
     ids = np.arange(1, x.shape[0] + 1)
-    builder = _builder_for(kind, d, x.shape[0])
+    builder = _builder_for(kind, d, x.shape[0], opq=opq)
     t0 = time.perf_counter()
     snap = builder.build(ids, x)
     build_s = time.perf_counter() - t0
@@ -80,13 +112,79 @@ def bench_index(kind, x, q, ref_ids, *, k=10, iters=5):
         _, got = run()
         times.append(time.perf_counter() - t0)
     qps = q.shape[0] / float(np.min(times))      # best-of-N: noisy box
-    out = {"kind": kind, "build_s": round(build_s, 3), "qps": round(qps, 1),
+    label = f"{kind}-opq" if opq else kind
+    out = {"kind": label, "build_s": round(build_s, 3), "qps": round(qps, 1),
            "recall_at_10": recall_at_k(got, ref_ids)}
+    if kind != "exact":
+        out["nlist"], out["nprobe"] = _shape_for(x.shape[0])
     if kind == "ivf-pq":
         out["code_dtype"] = str(snap.payload.dtype)
         out["code_bytes_per_vec"] = (snap.payload.shape[-1]
                                      * snap.payload.dtype.itemsize)
+        out["block_n"] = min(serving_index.PQ_SCAN_BLOCK_N,
+                             snap.nprobe * snap.cap)
+        out["scan_variant"] = serving_index.PQ_SCAN_VARIANT
+        out["opq"] = opq
     return out
+
+
+def bench_lloyd_baseline(d, *, n=8000, target_n=100000, k=10):
+    """Full-corpus Lloyd's build (sampling and mini-batch disabled) at a
+    size it still completes in minutes — the extrapolation anchor for
+    the large-n entries' speedup claim.  Built with the TARGET size's
+    nlist so the linear-in-n extrapolation is apples-to-apples: Lloyd's
+    per-iteration cost is O(n * nlist * d), and n is the only axis that
+    changes between anchor and target."""
+    x = make_vectors(n)
+    ids = np.arange(1, n + 1)
+    builder = _builder_for("ivf-pq", d, n, lloyd=True, shape_n=target_n)
+    t0 = time.perf_counter()
+    builder.build(ids, x)
+    return {"kind": "full-lloyd-anchor", "n": n,
+            "nlist": _shape_for(target_n)[0],
+            "build_s": round(time.perf_counter() - t0, 3)}
+
+
+def bench_scan_sweep(x, q, *, k=10, iters=3):
+    """LUT-kernel variant x block_n sweep + the IVF-Flat dense-vs-gather
+    crossover, on one ivf-pq / ivf-flat build — the measurements behind
+    PQ_SCAN_BLOCK_N / PQ_SCAN_VARIANT / DENSE_PROBE_FACTOR."""
+    d, n = x.shape[1], x.shape[0]
+    ids = np.arange(1, n + 1)
+    snap_pq = _builder_for("ivf-pq", d, n).build(ids, x)
+    snap_fl = _builder_for("ivf-flat", d, n).build(ids, x)
+
+    def best_ms(run):
+        run()                                    # warm
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            run()
+            ts.append(time.perf_counter() - t0)
+        return round(float(np.min(ts)) * 1e3, 2)
+
+    entry = {"kind": "scan_sweep", "n": n, "pq_scan_ms": {},
+             "flat_ms": {}}
+    saved = (serving_index.PQ_SCAN_BLOCK_N, serving_index.PQ_SCAN_VARIANT,
+             serving_index.DENSE_PROBE_FACTOR)
+    try:
+        for variant in ("onehot", "gather"):
+            for bn in (512, 1024, 2048, 4096):
+                serving_index.PQ_SCAN_VARIANT = variant
+                serving_index.PQ_SCAN_BLOCK_N = bn
+                entry["pq_scan_ms"][f"{variant}/bn={bn}"] = best_ms(
+                    lambda: snap_pq.search(q, k))
+        for regime, factor in (("dense", 1 << 30), ("gather", 0)):
+            serving_index.DENSE_PROBE_FACTOR = factor
+            entry["flat_ms"][regime] = best_ms(lambda: snap_fl.search(q, k))
+    finally:
+        (serving_index.PQ_SCAN_BLOCK_N, serving_index.PQ_SCAN_VARIANT,
+         serving_index.DENSE_PROBE_FACTOR) = saved
+    entry["chosen"] = {"block_n": serving_index.PQ_SCAN_BLOCK_N,
+                       "variant": serving_index.PQ_SCAN_VARIANT,
+                       "dense_probe_factor":
+                           serving_index.DENSE_PROBE_FACTOR}
+    return entry
 
 
 def bench_lifecycle(x, q, *, k=10, swap_iters=200, query_reps=60,
@@ -98,10 +196,12 @@ def bench_lifecycle(x, q, *, k=10, swap_iters=200, query_reps=60,
       assignment + delta reconciliation).
     publish_ms_*: service.publish of a 16-row batch with compaction
       disabled — the O(append) request-path cost (no IVF/PQ inline).
-    query_p99_ms_quiescent vs query_p99_ms_during_rebuild: per-batch
-      query latency with nothing else running vs with a full rebuild
-      (train + bulk add) on a background thread — the p99 a request loop
-      pays while the nightly build is in flight.
+    query_*: per-query latency distributions from the obs
+      ``query_latency_ms{phase="quiescent"|"during_rebuild"}`` histograms.
+      Every executable the windows touch is warmed first (one full
+      rebuild + a query), so the numbers are service time under load —
+      not compile time, which is what the old cold-window wall-clocking
+      reported.
     """
     d = x.shape[1]
     n = x.shape[0]
@@ -135,19 +235,22 @@ def bench_lifecycle(x, q, *, k=10, swap_iters=200, query_reps=60,
 
     # drain the delta before the query windows: both must run over the
     # same state (main tier only) so the ONLY difference between them is
-    # the background build
+    # the background build.  Then warm EVERYTHING the windows will hit:
+    # one full rebuild at the post-publish ntotal (compiles the train/
+    # encode shapes the background loop reuses) and one query.
     svc.rebuild(mode="compact", block=True)
-    svc.query(q, k)                                   # warm post-compact
+    svc.rebuild(mode="full", block=True)
+    svc.query(q, k)
 
-    def timed_queries(reps):
-        lat = []
+    def timed_queries(phase, reps):
+        h = obs.histogram("query_latency_ms", phase=phase)
         for _ in range(reps):
             t0 = time.perf_counter()
             svc.query(q, k)
-            lat.append((time.perf_counter() - t0) * 1e3)
-        return lat
+            h.observe((time.perf_counter() - t0) * 1e3)
+        return h
 
-    quiescent = timed_queries(query_reps)
+    h_quiet = timed_queries("quiescent", query_reps)
 
     stop = threading.Event()
 
@@ -157,7 +260,7 @@ def bench_lifecycle(x, q, *, k=10, swap_iters=200, query_reps=60,
 
     t = threading.Thread(target=rebuild_loop, daemon=True)
     t.start()
-    during = timed_queries(query_reps)
+    h_during = timed_queries("during_rebuild", query_reps)
     stop.set()
     t.join()
 
@@ -168,49 +271,106 @@ def bench_lifecycle(x, q, *, k=10, swap_iters=200, query_reps=60,
             "swap_ms_p50": pct(swap_ms, 50), "swap_ms_p99": pct(swap_ms, 99),
             "publish_ms_p50": pct(publish_ms, 50),
             "publish_ms_p99": pct(publish_ms, 99),
-            "query_p99_ms_quiescent": pct(quiescent, 99),
-            "query_p99_ms_during_rebuild": pct(during, 99),
-            "query_p50_ms_quiescent": pct(quiescent, 50),
-            "query_p50_ms_during_rebuild": pct(during, 50),
+            "query_p99_ms_quiescent": round(h_quiet.percentile(99), 3),
+            "query_p99_ms_during_rebuild": round(h_during.percentile(99), 3),
+            "query_p50_ms_quiescent": round(h_quiet.percentile(50), 3),
+            "query_p50_ms_during_rebuild": round(h_during.percentile(50), 3),
             "final_version": svc.version}
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sizes", type=int, nargs="+", default=[2000, 8000])
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[2000, 8000, 100000])
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--iters", type=int, default=7)   # best-of-7: the box
     #                                                   noise flips thin
     #                                                   margins at 5
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fewer timing reps, no lifecycle/sweep/"
+                         "OPQ/Lloyd-anchor sections")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the scan-shape sweep section")
+    ap.add_argument("--max-flat-n", type=int, default=200000,
+                    help="above this, only ivf-pq is benched (exact stays "
+                         "the recall oracle)")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: BENCH_retrieval.json next "
+                         "to this file)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.iters = min(args.iters, 3)
 
+    obs.reset()
     results = []
+    lloyd_anchor = None
+    if not args.quick and any(n >= 50000 for n in args.sizes):
+        target = max(n for n in args.sizes if n >= 50000)
+        lloyd_anchor = bench_lloyd_baseline(64, target_n=target, k=args.k)
+        results.append(lloyd_anchor)
+        print(f"full-Lloyd anchor: n={lloyd_anchor['n']} "
+              f"nlist={lloyd_anchor['nlist']} "
+              f"build={lloyd_anchor['build_s']}s")
+
     for n in args.sizes:
         x = make_vectors(n)
         q = make_vectors(args.batch, seed=7)
         oracle = serving.IndexBuilder("exact", x.shape[1]).build(
             np.arange(1, n + 1), x)
         _, ref_ids = oracle.search(q, args.k)
-        for kind in ("exact", "ivf-flat", "ivf-pq"):
+        kinds = ["exact", "ivf-flat", "ivf-pq"]
+        if n > args.max_flat_n:
+            kinds = ["ivf-pq"]
+        for kind in kinds:
             r = {"n": n, **bench_index(kind, x, q, ref_ids, k=args.k,
                                        iters=args.iters)}
+            if kind == "ivf-pq" and lloyd_anchor and n >= 50000:
+                # linear in n at matched nlist (Lloyd's coarse cost is
+                # O(n * nlist * d)); the nlist ratio is <= 1 for the
+                # non-target sizes, keeping the estimate conservative
+                ext = (lloyd_anchor["build_s"] * n / lloyd_anchor["n"]
+                       * _shape_for(n)[0] / lloyd_anchor["nlist"])
+                r["full_lloyd_extrapolated_s"] = round(ext, 1)
+                r["build_speedup_vs_full_lloyd"] = round(
+                    ext / r["build_s"], 1)
             results.append(r)
-            print(f"n={n:>7} {r['kind']:>9}: qps={r['qps']:>9} "
+            print(f"n={n:>7} {r['kind']:>11}: qps={r['qps']:>9} "
                   f"recall@10={r['recall_at_10']:.3f} "
                   f"build={r['build_s']}s")
-        r = bench_lifecycle(x, q, k=args.k)
-        results.append(r)
-        print(f"n={n:>7} lifecycle: swap p99={r['swap_ms_p99']}ms "
-              f"publish p99={r['publish_ms_p99']}ms "
-              f"query p99 quiescent={r['query_p99_ms_quiescent']}ms "
-              f"/ during rebuild={r['query_p99_ms_during_rebuild']}ms")
+        if not args.quick:
+            r = {"n": n, **bench_index("ivf-pq", x, q, ref_ids, k=args.k,
+                                       iters=args.iters, opq=True)}
+            results.append(r)
+            print(f"n={n:>7} {r['kind']:>11}: qps={r['qps']:>9} "
+                  f"recall@10={r['recall_at_10']:.3f} "
+                  f"build={r['build_s']}s")
+        if not args.quick and not args.no_sweep and n == 8000:
+            r = bench_scan_sweep(x, q, k=args.k)
+            results.append(r)
+            print(f"n={n:>7}  scan_sweep: pq={r['pq_scan_ms']} "
+                  f"flat={r['flat_ms']}")
+        if not args.quick:
+            r = bench_lifecycle(x, q, k=args.k)
+            results.append(r)
+            print(f"n={n:>7}   lifecycle: swap p99={r['swap_ms_p99']}ms "
+                  f"publish p99={r['publish_ms_p99']}ms query p50/p99 "
+                  f"quiescent={r['query_p50_ms_quiescent']}/"
+                  f"{r['query_p99_ms_quiescent']}ms, during rebuild="
+                  f"{r['query_p50_ms_during_rebuild']}/"
+                  f"{r['query_p99_ms_during_rebuild']}ms")
 
-    out = pathlib.Path(__file__).parent / "BENCH_retrieval.json"
+    out = pathlib.Path(args.out) if args.out else (
+        pathlib.Path(__file__).parent / "BENCH_retrieval.json")
     out.write_text(json.dumps(
         {"batch": args.batch, "k": args.k, "iters": args.iters,
+         "config": {"pq_scan_block_n": serving_index.PQ_SCAN_BLOCK_N,
+                    "pq_scan_variant": serving_index.PQ_SCAN_VARIANT,
+                    "dense_probe_factor": serving_index.DENSE_PROBE_FACTOR,
+                    "train_sample_coarse": 16384, "train_sample_pq": 8192},
          "results": results}, indent=2))
     print(f"wrote {out}")
+    return results
 
 
 if __name__ == "__main__":

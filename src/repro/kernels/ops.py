@@ -147,6 +147,7 @@ def embedding_bag(table, idx, weights=None):
     return _ebag.embedding_bag(table, idx, weights, interpret=_interpret())
 
 
-def pq_lut_scores(lut, codes, valid=None, *, block_n: int = 128):
+def pq_lut_scores(lut, codes, valid=None, *, block_n: int = 128,
+                  variant: str = "auto"):
     return _pq.pq_lut_scores(lut, codes, valid, block_n=block_n,
-                             interpret=_interpret())
+                             interpret=_interpret(), variant=variant)

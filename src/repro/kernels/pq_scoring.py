@@ -5,13 +5,23 @@ corpus is [N, M] uint8 codes; a query is turned into a lookup table
 LUT[m, k] = <q_m, codebook[m, k]> and the score of candidate n is
 sum_m LUT[m, codes[n, m]] — a gather + segment accumulate per candidate.
 
-TPU-native design: the per-code gather is hostile to the VPU (random
-lane indexing), so the kernel materializes the codes block as a one-hot
-[block_n, M*K] matrix with broadcasted_iota compares (pure VPU) and turns
-the whole gather+accumulate into ONE [block_n, M*K] x [M*K] MXU contraction
-against the flattened LUT.  Probabilities of the trade: K*M extra FLOPs per
-candidate, zero irregular memory traffic — the MXU is idle during a scan
-anyway, so fusing the gather into a matmul is free throughput.
+Two block-scoring variants, selected by ``variant``:
+
+  "onehot"  TPU-native: the per-code gather is hostile to the VPU (random
+            lane indexing), so the kernel materializes the codes block as
+            a one-hot [block_n, M*K] matrix with broadcasted_iota compares
+            (pure VPU) and turns the whole gather+accumulate into ONE
+            [block_n, M*K] x [M*K] MXU contraction against the flattened
+            LUT.  K*M extra FLOPs per candidate, zero irregular memory
+            traffic — the MXU is idle during a scan anyway.
+  "gather"  direct LUT gather (codes offset into the flattened [M*K]
+            table) + sum over M.  In interpret mode the one-hot path's
+            [block_n, M*K] materialization is real host memory traffic,
+            so the gather is ~an order of magnitude cheaper there; on a
+            compiled backend it only pays off while M*K is small enough
+            that gather latency beats the contraction.
+  "auto"    gather when interpreting (CPU) — measured strictly faster at
+            every M*K in BENCH_retrieval.json — else the MXU contraction.
 
 Layouts:
   lut    [B, M, K]  f32   one table per query
@@ -36,7 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _block_scores(lut_ref, codes_ref, *, n_codes: int):
+def _block_scores_onehot(lut_ref, codes_ref, *, n_codes: int):
     lut = lut_ref[0].astype(jnp.float32)            # [M, K]
     codes = codes_ref[0].astype(jnp.int32)          # [bn, M] (uint8 or i32)
     bn, M = codes.shape
@@ -48,27 +58,55 @@ def _block_scores(lut_ref, codes_ref, *, n_codes: int):
         (((1,), (0,)), ((), ())))                   # [bn]
 
 
-def _kernel(lut_ref, codes_ref, o_ref, *, n_codes: int):
-    o_ref[0, :] = _block_scores(lut_ref, codes_ref,
-                                n_codes=n_codes).astype(o_ref.dtype)
+def _block_scores_gather(lut_ref, codes_ref, *, n_codes: int):
+    lut = lut_ref[0].astype(jnp.float32)            # [M, K]
+    codes = codes_ref[0].astype(jnp.int32)          # [bn, M]
+    M = codes.shape[1]
+    offs = codes + (jnp.arange(M, dtype=jnp.int32) * n_codes)[None, :]
+    return jnp.take(lut.reshape(M * n_codes), offs,
+                    axis=0).sum(axis=1)             # [bn]
 
 
-def _masked_kernel(lut_ref, codes_ref, valid_ref, o_ref, *, n_codes: int):
-    scores = _block_scores(lut_ref, codes_ref, n_codes=n_codes)
+_SCORES = {"onehot": _block_scores_onehot, "gather": _block_scores_gather}
+
+
+def _kernel(lut_ref, codes_ref, o_ref, *, n_codes: int, variant: str):
+    o_ref[0, :] = _SCORES[variant](lut_ref, codes_ref,
+                                   n_codes=n_codes).astype(o_ref.dtype)
+
+
+def _masked_kernel(lut_ref, codes_ref, valid_ref, o_ref, *, n_codes: int,
+                   variant: str):
+    scores = _SCORES[variant](lut_ref, codes_ref, n_codes=n_codes)
     scores = jnp.where(valid_ref[0] != 0, scores, -jnp.inf)
     o_ref[0, :] = scores.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _resolve_variant(variant: str, interpret: bool) -> str:
+    if variant == "auto":
+        # interpret mode executes the kernel body as real host ops, where
+        # the [block_n, M*K] one-hot materialization dominates; compiled
+        # Mosaic keeps the MXU contraction (the gather stays selectable
+        # explicitly for small-M*K experiments on device)
+        return "gather" if interpret else "onehot"
+    if variant not in _SCORES:
+        raise ValueError(f"unknown pq scan variant: {variant!r}")
+    return variant
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret",
+                                             "variant"))
 def pq_lut_scores(lut, codes, valid=None, *, block_n: int = 128,
-                  interpret: bool = True):
+                  interpret: bool = True, variant: str = "auto"):
     """lut: [B, M, K] f32; codes: [Bc, N, M] uint8/int32 with Bc in {1, B}.
 
     Returns [B, N] f32: out[b, n] = sum_m lut[b, m, codes[min(b,Bc-1), n, m]].
     With valid [Bv, N] (Bv in {1, B}), out[b, n] = -inf where not
     valid[min(b,Bv-1), n] — the padded-CSR gather path scores fixed-width
-    candidate blocks whose tail slots hold no entry.
+    candidate blocks whose tail slots hold no entry.  ``variant`` picks
+    the block-scoring strategy (see module docstring).
     """
+    variant = _resolve_variant(variant, interpret)
     B, M, K = lut.shape
     Bc, N, Mc = codes.shape
     assert Mc == M and Bc in (1, B), (codes.shape, lut.shape)
@@ -90,7 +128,7 @@ def pq_lut_scores(lut, codes, valid=None, *, block_n: int = 128,
     ]
     operands = [lut, codes]
     if valid is None:
-        kernel = functools.partial(_kernel, n_codes=K)
+        kernel = functools.partial(_kernel, n_codes=K, variant=variant)
     else:
         Bv, Nv = valid.shape
         assert Nv == N and Bv in (1, B), (valid.shape, lut.shape)
@@ -99,7 +137,7 @@ def pq_lut_scores(lut, codes, valid=None, *, block_n: int = 128,
             valid = jnp.pad(valid, ((0, 0), (0, pad)))
         in_specs.append(pl.BlockSpec((1, block_n), _bcast(Bv == 1)))
         operands.append(valid)
-        kernel = functools.partial(_masked_kernel, n_codes=K)
+        kernel = functools.partial(_masked_kernel, n_codes=K, variant=variant)
     out = pl.pallas_call(
         kernel,
         grid=(B, Np // block_n),

@@ -220,10 +220,8 @@ def micro_batch_loop(rec: Recommender, requests, *, max_batch: int,
     return results, n_batches
 
 
-def measure_recall(rec: Recommender, histories, *, k: int, probe: int = 16):
-    """True recall@k of the served path vs an exact-MIPS oracle over the
-    full-precision store, on a probe subset of requests (replaces the old
-    fill-rate check that never measured recall)."""
+def _probe_users(rec: Recommender, histories, probe: int):
+    """Encode the probe-subset histories into user embeddings."""
     probe = min(probe, len(histories))
     L = rec.cfg.hist_len
     hist = np.zeros((probe, L), np.int32)
@@ -232,7 +230,15 @@ def measure_recall(rec: Recommender, histories, *, k: int, probe: int = 16):
         h = h[-L:]
         hist[i, :len(h)] = h
         mask[i, :len(h)] = True
-    user = rec.encode_users(hist, mask)
+    return rec.encode_users(hist, mask)
+
+
+def measure_recall(rec: Recommender, histories, *, k: int, probe: int = 16):
+    """True recall@k of the served path vs an exact-MIPS oracle over the
+    full-precision store, on a probe subset of requests (replaces the old
+    fill-rate check that never measured recall)."""
+    probe = min(probe, len(histories))
+    user = _probe_users(rec, histories, probe)
     _, got = rec.service.query(user, k)
     store = rec.service.store.host
     scores = user @ store.T
@@ -257,6 +263,11 @@ def main(argv=None):
                     help="cell-probe ranking; ip recalls large-norm MIPS "
                          "winners on the launcher's unnormalized encoder "
                          "embeddings (see Recommender)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="grid-tune (nprobe, k') against the exact-MIPS "
+                         "recall oracle after the bootstrap build; the "
+                         "winner is installed by atomic swap and future "
+                         "rebuilds inherit it")
     ap.add_argument("--rebuild-mid-loop", action="store_true",
                     help="publish fresh news and run a background full "
                          "rebuild + atomic swap in the middle of the "
@@ -306,6 +317,22 @@ def main(argv=None):
           f"({args.index}, ntotal={svc.ntotal}, v{svc.version}) in "
           f"{time.time()-t0:.1f}s")
     reqs = [h for h in log.histories[:args.requests]]
+
+    if args.autotune and args.index != "exact":
+        def tune_measure():
+            recall = measure_recall(rec, reqs, k=args.k, probe=args.probe)
+            user = _probe_users(rec, reqs, args.probe)
+            t0 = time.perf_counter()          # measure_recall warmed this
+            svc.query(user, args.k)           # (nprobe, k') executable
+            return recall, (time.perf_counter() - t0) * 1e3
+        best = serving.tune_service(
+            svc, tune_measure, nprobes=(4, 8, 16, 32),
+            k_primes=(max(4 * args.k, 32), args.k_prime, 2 * args.k_prime),
+            target_recall=args.recall_threshold)
+        rec.nprobe, rec.k_prime = best.nprobe, best.k_prime
+        print(f"autotuned: nprobe={best.nprobe} k'={best.k_prime} "
+              f"recall@{args.k}={best.recall:.3f} ({best.ms:.1f}ms/batch, "
+              f"{len(best.trials)} configs tried)")
 
     on_batch = None
     if args.rebuild_mid_loop:

@@ -8,8 +8,10 @@ from .index import (PAD_ID, FlatIndex, IVFConfig, IVFFlatIndex, IVFPQIndex,
                     make_index)
 from .online import (DeltaBuffer, DeltaView, hybrid_search, ingest_from_cache,
                      merge_topk_dedup)
-from .pq import (PQCodebook, PQConfig, kmeans, pq_decode, pq_encode, pq_lut,
-                 pq_search, pq_train)
+from .pq import (PQCodebook, PQConfig, fit_kmeans, kmeans, kmeans_minibatch,
+                 opq_train, pq_decode, pq_encode, pq_lut, pq_search, pq_train,
+                 sample_rows)
 from .service import RetrievalService, ServiceView
 from .snapshot import IndexSnapshot, empty_snapshot, snapshot_from_index
 from .store import EmbeddingStore
+from .tune import TuneResult, autotune, tune_service

@@ -69,8 +69,13 @@ class IndexBuilder:
         with obs.span("index_build", kind=self.kind):
             idx = make_index(self.kind, self.dim, ivf=self.ivf, pq=self.pq)
             key = jax.random.PRNGKey(self.seed) if key is None else key
+            # sub-spans: index.train emits index_build_sample /
+            # index_build_train (+ index_build_train_ms); the bulk add —
+            # IVF assignment + PQ encode of every row — is the encode
+            # phase.  Together they attribute the whole build cost.
             idx.train(key, jnp.asarray(emb))
-            idx.add(ids, emb)
+            with obs.span("index_build_encode", kind=self.kind):
+                idx.add(ids, emb)
         return snapshot_from_index(idx, next(self._versions), time.time())
 
     def compact(self, snapshot: IndexSnapshot, ids, emb) -> IndexSnapshot:
@@ -118,5 +123,8 @@ class IndexBuilder:
         idx._payload_dev = snap.payload
         idx._lens = snap.lens
         if isinstance(idx, IVFPQIndex):
-            idx.codebook = PQCodebook(snap.pq_centers)
+            # getattr: snapshots minted before the OPQ field existed have
+            # no pq_rot — they materialize (and serve) with R = identity
+            idx.codebook = PQCodebook(snap.pq_centers,
+                                      getattr(snap, "pq_rot", None))
         return idx

@@ -37,15 +37,35 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .pq import PQCodebook, PQConfig, kmeans, pq_encode, pq_lut, pq_train
+from repro import obs
+
+from .pq import (PQCodebook, PQConfig, fit_kmeans, opq_train, pq_encode,
+                 pq_lut, pq_train, sample_rows)
 
 PAD_ID = -1
 MIN_CAP = 8            # smallest per-list capacity bucket
+
+# Scan-shape knobs, tuned on this box via benchmarks/retrieval.py (the
+# chosen values are recorded in BENCH_retrieval.json entries):
+#   DENSE_PROBE_FACTOR  IVF-Flat scores every cell densely (one big matmul)
+#                       while nlist <= factor * B * nprobe, else gathers
+#                       only probed payloads per query
+#   PQ_SCAN_BLOCK_N     cap on the Pallas LUT kernel's candidate block —
+#                       wide blocks amortize per-grid-step overhead
+#                       (dominant in interpret mode)
+#   PQ_SCAN_VARIANT     block-scoring strategy ("auto" = gather when
+#                       interpreting, one-hot MXU contraction on TPU)
+DENSE_PROBE_FACTOR = 4
+PQ_SCAN_BLOCK_N = 4096
+PQ_SCAN_VARIANT = "auto"
+ENCODE_CHUNK = 65536   # bulk PQ encode chunk: bounds the [chunk, M, K]
+#                        distance buffer at million-row adds
 
 # Module-level so every flat scan (FlatIndex, delta views, snapshots of any
 # vintage) shares ONE jit cache: a fresh buffer/snapshot at a shape seen
@@ -63,6 +83,11 @@ class IVFConfig:
     nlist: int = 32        # coarse cells
     nprobe: int = 8        # cells scanned per query
     train_iters: int = 15
+    train_sample: int = 16384   # coarse k-means fits on at most this many
+    #                             sampled rows — build cost stops growing
+    #                             with ntotal (full corpus when it fits)
+    train_batch: int = 1024     # mini-batch size past which Lloyd's is
+    #                             replaced by kmeans_minibatch
     metric: str = "l2"     # cell-probe metric: "l2" ranks cells on the unit
     #                        sphere — the same metric the spherical k-means
     #                        partition was built with; "ip" is the legacy
@@ -139,20 +164,22 @@ def _gather_candidates(q, cent_unit, cent_raw, list_ids, lens, *,
     return probes, cand_ids, valid
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric"))
+@functools.partial(jax.jit,
+                   static_argnames=("nprobe", "k", "metric", "dense"))
 def _search_flat_csr(q, cent_unit, cent_raw, list_ids, list_vecs, lens, *,
-                     nprobe: int, k: int, metric: str):
+                     nprobe: int, k: int, metric: str, dense: bool = True):
     """Jitted IVF-Flat search over padded-CSR storage.
 
     q [B, d]; cent_unit/cent_raw [nlist, d]; list_ids [nlist, cap] int32;
     list_vecs [nlist, cap, d]; lens [nlist] int32.  Shapes are static per
-    cap bucket, so every fill level hits the same warm executable.
+    cap bucket, so every fill level hits the same warm executable.  The
+    caller picks ``dense`` from the DENSE_PROBE_FACTOR crossover (the
+    flag is static, so each regime has its own warm executable).
     """
     B, cap = q.shape[0], list_ids.shape[1]
-    nlist = list_ids.shape[0]
     probes, cand_ids, valid = _gather_candidates(
         q, cent_unit, cent_raw, list_ids, lens, nprobe=nprobe, metric=metric)
-    if nlist <= 4 * B * nprobe:
+    if dense:
         # dense coverage (micro-batch serving: B*nprobe probes over few
         # cells): score every cell once in one MXU/BLAS matmul and gather
         # only the probed [B, P, cap] score blocks — far cheaper than
@@ -165,21 +192,33 @@ def _search_flat_csr(q, cent_unit, cent_raw, list_ids, list_vecs, lens, *,
     return _masked_topk(scores.reshape(B, -1), cand_ids, valid, k)
 
 
-@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric"))
+def flat_dense_crossover(nlist: int, batch: int, nprobe: int) -> bool:
+    """Dense-vs-gather regime for the IVF-Flat scan (see
+    DENSE_PROBE_FACTOR; tuned in benchmarks/retrieval.py)."""
+    return nlist <= DENSE_PROBE_FACTOR * batch * nprobe
+
+
+@functools.partial(jax.jit, static_argnames=("nprobe", "k", "metric",
+                                             "block_n", "variant"))
 def _search_pq_csr(q, cent_unit, cent_raw, list_ids, list_codes, lens,
-                   cb_centers, *, nprobe: int, k: int, metric: str):
+                   cb_centers, cb_rot=None, *, nprobe: int, k: int,
+                   metric: str, block_n: int = PQ_SCAN_BLOCK_N,
+                   variant: str = "auto"):
     """Jitted IVF-PQ search: coarse term + masked Pallas LUT over the
-    gathered [B, nprobe*cap, M] padded-CSR uint8 codes."""
+    gathered [B, nprobe*cap, M] padded-CSR uint8 codes.  ``cb_rot`` is
+    the optional OPQ rotation (None = identity, the pre-OPQ format) —
+    applied inside pq_lut, so probing and the coarse term stay in the
+    original space while ADC runs in code space."""
     from repro.kernels import ops
     B, cap = q.shape[0], list_ids.shape[1]
     probes, cand_ids, valid = _gather_candidates(
         q, cent_unit, cent_raw, list_ids, lens, nprobe=nprobe, metric=metric)
-    lut = pq_lut(PQCodebook(cb_centers), q)                   # [B, M, K]
+    lut = pq_lut(PQCodebook(cb_centers, cb_rot), q)           # [B, M, K]
     codes = list_codes[probes].reshape(B, -1, list_codes.shape[-1])
-    # wide blocks: the LUT contraction runs best as few big one-hot
-    # matmuls (and in interpret mode each grid step is an unrolled op)
-    block_n = min(1024, nprobe * cap)
-    adc = ops.pq_lut_scores(lut, codes, valid, block_n=block_n)  # [B, P*cap]
+    # wide blocks amortize per-grid-step overhead (dominant in interpret
+    # mode); the caller clamps block_n to the candidate width
+    adc = ops.pq_lut_scores(lut, codes, valid, block_n=block_n,
+                            variant=variant)                  # [B, P*cap]
     coarse = jnp.take_along_axis(q @ cent_raw.T, probes, axis=1)
     scores = adc + jnp.repeat(coarse, cap, axis=1)
     return _masked_topk(scores, cand_ids, valid, k)
@@ -222,6 +261,8 @@ def _csr_remove(list_ids, payload, lens, drop_ids):
 class FlatIndex:
     """Exact MIPS over the full corpus — the fallback and recall oracle."""
 
+    kind = "exact"
+
     def __init__(self, dim: int):
         self.dim = dim
         self._vecs = np.zeros((0, dim), np.float32)
@@ -258,6 +299,8 @@ class IVFFlatIndex:
     """IVF coarse quantizer + full-precision scoring of probed cells,
     on padded-CSR device storage with a jitted end-to-end search (one
     warm executable per cap bucket)."""
+
+    kind = "ivf-flat"
 
     def __init__(self, dim: int, cfg: IVFConfig = IVFConfig()):
         self.dim, self.cfg = dim, cfg
@@ -297,20 +340,37 @@ class IVFFlatIndex:
         partition probed by inner product ranked cells by a metric that
         never built them).  Raw-space cell means are kept alongside: they
         are the PQ residual origin / coarse score term and the legacy
-        "ip" probe ranking."""
+        "ip" probe ranking.
+
+        The quantizer fits on at most ``cfg.train_sample`` sampled rows
+        via mini-batch k-means (fit_kmeans), so training cost — and the
+        compiled training executables' shapes — stop growing with ntotal;
+        only the O(n) cell assignment / raw-mean pass sees every row.
+        """
         vectors = jnp.asarray(vectors, jnp.float32)
-        cent, _ = kmeans(key, _normalize(vectors), self.cfg.nlist,
-                         self.cfg.train_iters)
-        self._cent_dev = _normalize(cent)
-        assign = self._assign_cells(vectors)
-        onehot = jax.nn.one_hot(assign, self.cfg.nlist, dtype=vectors.dtype)
-        counts = onehot.sum(0)                              # [nlist]
-        means = onehot.T @ vectors / jnp.maximum(counts, 1.0)[:, None]
-        self._cent_raw_dev = jnp.where(counts[:, None] > 0, means,
-                                       self._cent_dev)
-        self.centroids = np.asarray(self._cent_dev)
-        self.centroids_raw = np.asarray(self._cent_raw_dev)
-        self._post_train(key, vectors, assign)
+        with obs.span("index_build_sample", kind=self.kind):
+            xs = sample_rows(jax.random.fold_in(key, 0x11),
+                             _normalize(vectors), self.cfg.train_sample)
+        t0 = time.perf_counter()
+        with obs.span("index_build_train", kind=self.kind):
+            cent, _ = fit_kmeans(key, xs, self.cfg.nlist,
+                                 iters=self.cfg.train_iters,
+                                 batch=self.cfg.train_batch)
+            self._cent_dev = _normalize(cent)
+            assign = self._assign_cells(vectors)
+            ones = jnp.ones((vectors.shape[0],), vectors.dtype)
+            counts = jax.ops.segment_sum(ones, assign,
+                                         num_segments=self.cfg.nlist)
+            sums = jax.ops.segment_sum(vectors, assign,
+                                       num_segments=self.cfg.nlist)
+            means = sums / jnp.maximum(counts, 1.0)[:, None]
+            self._cent_raw_dev = jnp.where(counts[:, None] > 0, means,
+                                           self._cent_dev)
+            self.centroids = np.asarray(self._cent_dev)
+            self.centroids_raw = np.asarray(self._cent_raw_dev)
+            self._post_train(key, vectors, assign)
+        obs.histogram("index_build_train_ms", kind=self.kind).observe(
+            (time.perf_counter() - t0) * 1e3)
         return self
 
     def _post_train(self, key, vectors, assign):
@@ -352,7 +412,8 @@ class IVFFlatIndex:
         """Upsert: a re-added id replaces its previous (stale) entry."""
         assert self.is_trained, "train() before add()"
         ids = self._check_ids(ids)
-        self.remove(ids)
+        if self.ntotal:        # nothing to displace on a bulk build —
+            self.remove(ids)   # the isin scan is ~1s at 100k drop ids
         vecs = jnp.asarray(vectors, jnp.float32)
         assign = self._assign_cells(vecs)
         counts = np.bincount(np.asarray(assign), minlength=self.cfg.nlist)
@@ -381,8 +442,12 @@ class IVFPQIndex(IVFFlatIndex):
     centroid[cell] (4x less code memory than the pre-PR-4 int32 storage);
     a candidate's score decomposes as <q, centroid[cell]> + LUT-sum over
     its codes (the first term is one [B, nlist] matmul, the second is the
-    kernels/pq_scoring.py hot path).
+    kernels/pq_scoring.py hot path).  With ``pq_cfg.opq_iters > 0`` the
+    codebooks carry an OPQ rotation, applied transparently by every
+    encode/LUT path.
     """
+
+    kind = "ivf-pq"
 
     def __init__(self, dim: int, cfg: IVFConfig = IVFConfig(),
                  pq_cfg: PQConfig = PQConfig()):
@@ -406,12 +471,24 @@ class IVFPQIndex(IVFFlatIndex):
 
     def _post_train(self, key, vectors, assign):
         residuals = vectors - self._cent_raw_dev[assign]
-        self.codebook = pq_train(jax.random.fold_in(key, 1), residuals,
-                                 self.pq_cfg)
+        fit = opq_train if self.pq_cfg.opq_iters > 0 else pq_train
+        self.codebook = fit(jax.random.fold_in(key, 1), residuals,
+                            self.pq_cfg)
 
     def _encode_payload_dev(self, vectors, assign):
         residuals = vectors - self._cent_raw_dev[assign]
-        return pq_encode(self.codebook, residuals)
+        n = residuals.shape[0]
+        if n <= ENCODE_CHUNK:
+            return pq_encode(self.codebook, residuals)
+        # chunked: pq_encode materializes a [n, M, K] distance buffer —
+        # at million-row bulk adds that is GBs; cap it per chunk.  The
+        # tail is padded up to a full chunk so every chunk (at every
+        # corpus size) runs the SAME compiled shape.
+        pad = -n % ENCODE_CHUNK
+        residuals = jnp.pad(residuals, ((0, pad), (0, 0)))
+        return jnp.concatenate(
+            [pq_encode(self.codebook, residuals[i:i + ENCODE_CHUNK])
+             for i in range(0, n + pad, ENCODE_CHUNK)])[:n]
 
 
 def make_index(kind: str, dim: int, *, ivf: IVFConfig = IVFConfig(),

@@ -24,8 +24,10 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
+from . import index as _index
 from .index import (PAD_ID, FlatIndex, IVFFlatIndex, IVFPQIndex, _flat_score,
-                    _search_flat_csr, _search_pq_csr, _topk_padded)
+                    _search_flat_csr, _search_pq_csr, _topk_padded,
+                    flat_dense_crossover)
 
 KINDS = ("exact", "ivf-flat", "ivf-pq")
 
@@ -56,6 +58,9 @@ class IndexSnapshot:
     payload: Any = None            # [nlist, cap, d] f32 | [nlist, cap, M] u8
     lens: Any = None               # [nlist] int32
     pq_centers: Any = None         # [M, K, d/M] PQ codebooks
+    pq_rot: Any = None             # [d, d] OPQ rotation; None = identity
+    #                                (pre-OPQ snapshots load as None and
+    #                                serve identically to an explicit eye)
     # wall-clock the builder produced this snapshot (0.0 for the empty
     # sentinel / legacy paths) — feeds the staleness-age gauge
     built_at: float = 0.0
@@ -99,12 +104,16 @@ class IndexSnapshot:
             s, ids = _search_flat_csr(
                 q, self.cent_unit, self.cent_raw, self.list_ids,
                 self.payload, self.lens,
-                nprobe=self.nprobe, k=k_eff, metric=self.metric)
+                nprobe=self.nprobe, k=k_eff, metric=self.metric,
+                dense=flat_dense_crossover(self.list_ids.shape[0], B,
+                                           self.nprobe))
         else:
             s, ids = _search_pq_csr(
                 q, self.cent_unit, self.cent_raw, self.list_ids,
-                self.payload, self.lens, self.pq_centers,
-                nprobe=self.nprobe, k=k_eff, metric=self.metric)
+                self.payload, self.lens, self.pq_centers, self.pq_rot,
+                nprobe=self.nprobe, k=k_eff, metric=self.metric,
+                block_n=min(_index.PQ_SCAN_BLOCK_N, self.nprobe * self.cap),
+                variant=_index.PQ_SCAN_VARIANT)
         s, ids = np.asarray(s, np.float32), np.asarray(ids, np.int64)
         if k_eff < k:            # fewer candidates than requested: pad out
             s = np.pad(s, ((0, 0), (0, k - k_eff)), constant_values=-np.inf)
@@ -138,6 +147,7 @@ def snapshot_from_index(idx, version: int,
             cent_unit=idx._cent_dev, cent_raw=idx._cent_raw_dev,
             list_ids=idx._ids_dev, payload=idx._payload_dev, lens=idx._lens,
             pq_centers=(idx.codebook.centers if kind == "ivf-pq" else None),
+            pq_rot=(idx.codebook.rot if kind == "ivf-pq" else None),
             built_at=built_at)
     if isinstance(idx, FlatIndex):
         return IndexSnapshot(version=version, kind="exact", dim=idx.dim,

@@ -1,0 +1,242 @@
+"""Scaled index builds: mini-batch k-means (objective parity with full
+Lloyd's, dead-centroid reseeding, bounded-sample dispatch), the OPQ
+rotation (orthogonality, recall non-regression on correlated dims,
+pre-OPQ snapshot back-compat), deterministic rebuilds, build-phase
+observability, and the (nprobe, k') autotuner."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs, serving
+from repro.serving import pq as pq_mod
+
+
+def make_corpus(n=2000, d=32, rank=8, seed=0):
+    """Low-rank + noise — correlated dims, the regime OPQ exists for
+    (and the spectral shape of PLM embeddings)."""
+    rng = np.random.default_rng(seed)
+    basis = rng.normal(size=(rank, d))
+    x = rng.normal(size=(n, rank)) @ basis + 0.1 * rng.normal(size=(n, d))
+    return x.astype(np.float32)
+
+
+def inertia(x, cent):
+    return float(jnp.sum(jnp.min(pq_mod._dist2(jnp.asarray(x),
+                                               jnp.asarray(cent)), axis=1)))
+
+
+def recall_at_k(ids, ref_ids):
+    k = ids.shape[1]
+    return np.mean([len(set(ids[b]) & set(ref_ids[b])) / k
+                    for b in range(ids.shape[0])])
+
+
+# ------------------------------------------------------------ mini-batch
+def test_minibatch_objective_within_tolerance_of_lloyd():
+    """Same data, same k: the sampled mini-batch optimizer must land
+    within a few percent of full Lloyd's inertia — the claim that lets
+    builds train on bounded samples instead of the corpus."""
+    x = make_corpus(6000)
+    k = 32
+    c_lloyd, _ = serving.kmeans(jax.random.PRNGKey(0), jnp.asarray(x), k, 25)
+    c_mb, _ = serving.kmeans_minibatch(jax.random.PRNGKey(0), jnp.asarray(x),
+                                       k, iters=40, batch=1024, polish=2)
+    j_lloyd, j_mb = inertia(x, c_lloyd), inertia(x, c_mb)
+    assert j_mb <= 1.10 * j_lloyd, (j_mb, j_lloyd)
+
+
+def test_lloyd_iter_reseeds_dead_centroid_onto_largest_cluster():
+    """Regression: a centroid that owns no points must be re-planted on a
+    far point of the largest cluster, not frozen in place."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(np.concatenate([
+        rng.normal(size=(900, 8)) * 0.1,           # big tight cluster at 0
+        rng.normal(size=(100, 8)) * 0.1 + 5.0,     # small cluster at 5
+    ]).astype(np.float32))
+    cent = jnp.asarray(np.stack([
+        np.zeros(8), np.full(8, 5.0), np.full(8, 1e4),   # last one: dead
+    ]).astype(np.float32))
+    new = pq_mod._lloyd_iter(x, cent)
+    a = np.asarray(pq_mod._assign(x, new))
+    assert set(np.unique(a)) == {0, 1, 2}          # nobody is dead anymore
+    # the reseed landed inside the data, not at the stale far-away spot
+    assert float(jnp.abs(new[2]).max()) < 10.0
+
+
+def test_kmeans_leaves_no_dead_centroids():
+    x = jnp.asarray(make_corpus(512, d=8, rank=2))
+    for fit in (lambda: serving.kmeans(jax.random.PRNGKey(3), x, 24, 10),
+                lambda: serving.kmeans_minibatch(jax.random.PRNGKey(3), x, 24,
+                                                 iters=20, batch=128)):
+        cent, assign = fit()
+        assert np.unique(np.asarray(assign)).size == 24
+
+
+def test_fit_kmeans_dispatch_and_sampling():
+    """Small corpora run exact Lloyd's (byte-identical to calling kmeans);
+    sample_rows is the identity below the cap and shrinks above it."""
+    x = jnp.asarray(make_corpus(256, d=8))
+    c1, _ = serving.fit_kmeans(jax.random.PRNGKey(0), x, 8, iters=5,
+                               batch=1024)
+    c2, _ = serving.kmeans(jax.random.PRNGKey(0), x, 8, 5)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    key = jax.random.PRNGKey(9)
+    assert serving.sample_rows(key, x, 512) is x
+    sub = serving.sample_rows(key, x, 100)
+    assert sub.shape == (100, 8)
+    # sampled rows are actual corpus rows, each at most once
+    matches = (np.asarray(sub)[:, None, :] == np.asarray(x)[None]).all(-1)
+    assert (matches.sum(1) == 1).all()
+
+
+# ------------------------------------------------------------------- OPQ
+def test_opq_rotation_is_orthogonal_and_not_worse():
+    x = jnp.asarray(make_corpus(3000))
+    cfg = serving.PQConfig(n_subvec=16, n_codes=32, opq_iters=4)
+    cb = serving.opq_train(jax.random.PRNGKey(0), x, cfg)
+    r = np.asarray(cb.rot)
+    np.testing.assert_allclose(r.T @ r, np.eye(r.shape[0]),
+                               rtol=0, atol=1e-4)
+    rec_opq = np.asarray(serving.pq_decode(cb, serving.pq_encode(cb, x)))
+    cb0 = serving.pq_train(jax.random.PRNGKey(0), x,
+                           dataclasses.replace(cfg, opq_iters=0))
+    rec_pq = np.asarray(serving.pq_decode(cb0, serving.pq_encode(cb0, x)))
+    xn = np.asarray(x)
+    err_opq = np.linalg.norm(rec_opq - xn) / np.linalg.norm(xn)
+    err_pq = np.linalg.norm(rec_pq - xn) / np.linalg.norm(xn)
+    assert err_opq <= err_pq + 5e-3, (err_opq, err_pq)
+
+
+def test_opq_two_stage_recall_not_below_plain_pq():
+    """Built through the lifecycle API on the correlated-dims corpus, the
+    rotated build's end-to-end recall@10 must not regress."""
+    x, q = make_corpus(2000), make_corpus(16, seed=7)
+    ids = np.arange(1, x.shape[0] + 1)
+    exact = serving.IndexBuilder("exact", x.shape[1]).build(ids, x)
+    _, ref_ids = exact.search(q, 10)
+    store = np.zeros((x.shape[0] + 1, x.shape[1]), np.float32)
+    store[ids] = x
+
+    def recall(opq_iters):
+        b = serving.IndexBuilder(
+            "ivf-pq", x.shape[1],
+            ivf=serving.IVFConfig(nlist=32, nprobe=8),
+            pq=serving.PQConfig(n_subvec=16, n_codes=32,
+                                opq_iters=opq_iters))
+        svc = serving.RetrievalService(b, store, k=10, k_prime=100)
+        svc.swap(b.build(ids, x))
+        _, got = svc.query(q, 10)
+        return recall_at_k(np.asarray(got), ref_ids)
+
+    assert recall(4) >= recall(0) - 0.02
+
+
+def test_pre_opq_snapshot_serves_identically_to_explicit_identity():
+    """Back-compat: pq_rot=None (the pre-OPQ snapshot format) must load,
+    serve byte-identical ids to an explicit eye(d) rotation, and still
+    support compaction."""
+    x, q = make_corpus(1500), make_corpus(8, seed=5)
+    ids = np.arange(1, x.shape[0] + 1)
+    b = serving.IndexBuilder("ivf-pq", x.shape[1],
+                             ivf=serving.IVFConfig(nlist=16, nprobe=8),
+                             pq=serving.PQConfig(n_subvec=16, n_codes=32))
+    snap = b.build(ids, x)
+    assert snap.pq_rot is None                     # plain builds stay rot-free
+    snap_eye = dataclasses.replace(
+        snap, pq_rot=jnp.eye(x.shape[1], dtype=jnp.float32))
+    s0, i0 = snap.search(q, 10)
+    s1, i1 = snap_eye.search(q, 10)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-5)
+    # compaction materializes the rot-free snapshot and re-freezes it
+    extra = make_corpus(64, seed=11)
+    snap2 = b.compact(snap, np.arange(2000, 2064), extra)
+    assert snap2.ntotal == snap.ntotal + 64 and snap2.pq_rot is None
+    _, got = snap2.search(extra[:4], 10)
+    got = np.asarray(got)
+    hits = sum(2000 + i in got[i] for i in range(4))   # compressed search:
+    assert hits >= 3                                   # allow one PQ miss
+
+
+# ------------------------------------------------- determinism / obs / tuner
+def test_rebuilds_are_deterministic_same_cap_bucket():
+    """Same builder seed + same rows -> identical snapshot geometry (cap
+    bucket, lens) and identical query results, so swapped-in rebuilds hit
+    the warm executables of their predecessors."""
+    x, q = make_corpus(1200), make_corpus(8, seed=3)
+    ids = np.arange(1, x.shape[0] + 1)
+    b = serving.IndexBuilder("ivf-pq", x.shape[1],
+                             ivf=serving.IVFConfig(nlist=16, nprobe=8),
+                             pq=serving.PQConfig(n_subvec=8, n_codes=32))
+    s1, s2 = b.build(ids, x), b.build(ids, x)
+    assert s1.cap == s2.cap
+    np.testing.assert_array_equal(np.asarray(s1.lens), np.asarray(s2.lens))
+    np.testing.assert_array_equal(np.asarray(s1.payload),
+                                  np.asarray(s2.payload))
+    r1, r2 = s1.search(q, 10), s2.search(q, 10)
+    np.testing.assert_array_equal(np.asarray(r1[1]), np.asarray(r2[1]))
+
+
+def test_build_emits_phase_spans_and_train_histogram():
+    obs.reset()
+    x = make_corpus(1000)
+    serving.IndexBuilder("ivf-pq", x.shape[1],
+                         ivf=serving.IVFConfig(nlist=16, nprobe=4),
+                         pq=serving.PQConfig(n_subvec=8, n_codes=16)
+                         ).build(np.arange(1, 1001), x)
+    for phase in ("index_build_sample", "index_build_train",
+                  "index_build_encode"):
+        h = obs.histogram("span_ms", name=phase, kind="ivf-pq")
+        assert h.count >= 1, phase
+    assert obs.histogram("index_build_train_ms", kind="ivf-pq").count >= 1
+    # phases nest inside the parent build span
+    total = obs.histogram("span_ms", name="index_build", kind="ivf-pq")
+    assert total.count == 1 and total.sum >= obs.histogram(
+        "span_ms", name="index_build_train", kind="ivf-pq").sum
+
+
+def test_autotune_picks_cheapest_config_meeting_target():
+    table = {(4, 50): (0.80, 1.0), (4, 100): (0.85, 2.0),
+             (8, 50): (0.92, 3.0), (8, 100): (0.97, 5.0)}
+    best = serving.autotune(lambda p, kp: table[(p, kp)],
+                            nprobes=(4, 8), k_primes=(50, 100),
+                            target_recall=0.9)
+    assert (best.nprobe, best.k_prime) == (8, 50) and best.met_target
+    assert len(best.trials) == 4
+    # nothing clears the bar -> highest recall wins
+    best = serving.autotune(lambda p, kp: table[(p, kp)],
+                            nprobes=(4, 8), k_primes=(50, 100),
+                            target_recall=0.99)
+    assert (best.nprobe, best.k_prime) == (8, 100) and not best.met_target
+
+
+def test_tune_service_installs_winner_and_clamps_grid():
+    x, q = make_corpus(1500), make_corpus(16, seed=7)
+    ids = np.arange(1, x.shape[0] + 1)
+    b = serving.IndexBuilder("ivf-pq", x.shape[1],
+                             ivf=serving.IVFConfig(nlist=16, nprobe=2),
+                             pq=serving.PQConfig(n_subvec=16, n_codes=32))
+    store = np.zeros((x.shape[0] + 1, x.shape[1]), np.float32)
+    store[ids] = x
+    svc = serving.RetrievalService(b, store, k=10, k_prime=20)
+    svc.swap(b.build(ids, x))
+    exact = serving.IndexBuilder("exact", x.shape[1]).build(ids, x)
+    _, ref_ids = exact.search(q, 10)
+
+    def measure():
+        _, got = svc.query(q, 10)
+        return recall_at_k(np.asarray(got), ref_ids), 1.0
+
+    best = serving.tune_service(svc, measure, nprobes=(2, 8, 64),
+                                k_primes=(50, 10 ** 6), target_recall=0.9)
+    assert best.nprobe <= 16                       # clamped to nlist
+    assert best.k_prime <= x.shape[0]              # clamped to ntotal
+    assert svc.k_prime == best.k_prime
+    assert svc.snapshot().nprobe == best.nprobe
+    assert b.ivf.nprobe == best.nprobe             # rebuilds inherit
+    recall, _ = measure()
+    assert recall >= 0.9

@@ -73,18 +73,21 @@ def test_pq_lut_matches_decoded_dot():
 
 
 # ------------------------------------------------------------- Pallas LUT
+@pytest.mark.parametrize("variant", ["onehot", "gather"])
 @pytest.mark.parametrize("B,M,K,N,block_n,shared", [
     (4, 8, 32, 300, 128, False),    # per-query candidate lists (IVF path)
     (4, 8, 32, 300, 128, True),     # one shared corpus scan (flat-PQ path)
     (1, 4, 256, 64, 64, True),      # K=256 (uint8-style codebooks)
     (3, 16, 16, 129, 32, False),    # N not a multiple of block_n
 ])
-def test_pq_kernel_matches_xla_reference(B, M, K, N, block_n, shared):
+def test_pq_kernel_matches_xla_reference(B, M, K, N, block_n, shared,
+                                         variant):
     key = jax.random.PRNGKey(B * 100 + N)
     k1, k2 = jax.random.split(key)
     lut = jax.random.normal(k1, (B, M, K))
     codes = jax.random.randint(k2, (1 if shared else B, N, M), 0, K)
-    out = pq_raw(lut, codes, block_n=block_n, interpret=True)
+    out = pq_raw(lut, codes, block_n=block_n, interpret=True,
+                 variant=variant)
     exp = ref.pq_lut_scores(lut, codes)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                rtol=1e-5, atol=1e-5)
