@@ -66,7 +66,8 @@ def _shape_for(n):
     return min(1024, n // 96), 64
 
 
-def _builder_for(kind, d, n, *, opq=False, lloyd=False, shape_n=None):
+def _builder_for(kind, d, n, *, opq=False, lloyd=False, shape_n=None,
+                 devices=None):
     nlist, nprobe = _shape_for(shape_n or n)
     big = 1 << 30          # lloyd=True: disable sampling AND mini-batch —
     #                        the full-corpus Lloyd's baseline build
@@ -85,13 +86,18 @@ def _builder_for(kind, d, n, *, opq=False, lloyd=False, shape_n=None):
         n_subvec=16, n_codes=64, opq_iters=4 if opq else 0,
         train_sample=big if lloyd else 8192,
         train_batch=big if lloyd else 4096)
-    return serving.IndexBuilder(kind, d, ivf=ivf, pq=pq)
+    return serving.IndexBuilder(kind, d, ivf=ivf, pq=pq, devices=devices)
 
 
-def bench_index(kind, x, q, ref_ids, *, k=10, iters=5, opq=False):
+def bench_index(kind, x, q, ref_ids, *, k=10, iters=5, opq=False,
+                devices=None, mesh_label=None):
+    """``devices``: shard the built snapshot's CSR rows across that device
+    list (the ``ShardedIndexSnapshot`` path); ``mesh_label`` tags the
+    entry's kind (e.g. ``ivf-flat@data=8``) so mesh-sweep entries never
+    collide with the plain ones."""
     d = x.shape[1]
     ids = np.arange(1, x.shape[0] + 1)
-    builder = _builder_for(kind, d, x.shape[0], opq=opq)
+    builder = _builder_for(kind, d, x.shape[0], opq=opq, devices=devices)
     t0 = time.perf_counter()
     snap = builder.build(ids, x)
     build_s = time.perf_counter() - t0
@@ -113,17 +119,34 @@ def bench_index(kind, x, q, ref_ids, *, k=10, iters=5, opq=False):
         times.append(time.perf_counter() - t0)
     qps = q.shape[0] / float(np.min(times))      # best-of-N: noisy box
     label = f"{kind}-opq" if opq else kind
+    if mesh_label:
+        label = f"{label}@{mesh_label}"
     out = {"kind": label, "build_s": round(build_s, 3), "qps": round(qps, 1),
            "recall_at_10": recall_at_k(got, ref_ids)}
     if kind != "exact":
         out["nlist"], out["nprobe"] = _shape_for(x.shape[0])
+    if devices is not None:
+        # acceptance invariant, recorded alongside the throughput: global
+        # probing over replicated centroids makes the sharded candidate
+        # set identical, so the top-k must match the unsharded build
+        # (same seed, same config) id-for-id
+        out["mesh_devices"] = len(devices)
+        ref_snap = _builder_for(kind, d, x.shape[0], opq=opq).build(ids, x)
+        _, want = ref_snap.search(q, k)
+        _, got_s = snap.search(q, k)
+        out["topk_matches_unsharded"] = bool(
+            np.array_equal(np.asarray(got_s), np.asarray(want)))
     if kind == "ivf-pq":
-        out["code_dtype"] = str(snap.payload.dtype)
-        out["code_bytes_per_vec"] = (snap.payload.shape[-1]
-                                     * snap.payload.dtype.itemsize)
-        out["block_n"] = min(serving_index.PQ_SCAN_BLOCK_N,
-                             snap.nprobe * snap.cap)
-        out["scan_variant"] = serving_index.PQ_SCAN_VARIANT
+        pay = getattr(snap, "payload_s", None)
+        pay = snap.payload if pay is None else pay
+        out["code_dtype"] = str(pay.dtype)
+        out["code_bytes_per_vec"] = (pay.shape[-1] * pay.dtype.itemsize)
+        if devices is None:
+            out["block_n"] = min(serving_index.PQ_SCAN_BLOCK_N,
+                                 snap.nprobe * snap.cap)
+            out["scan_variant"] = serving_index.PQ_SCAN_VARIANT
+        else:      # the sharded scan is the inline XLA gather ADC (no
+            out["scan_variant"] = "sharded-gather"   # pallas partitioning)
         out["opq"] = opq
     return out
 
@@ -295,12 +318,72 @@ def main(argv=None):
     ap.add_argument("--max-flat-n", type=int, default=200000,
                     help="above this, only ivf-pq is benched (exact stays "
                          "the recall oracle)")
+    ap.add_argument("--mesh", nargs="+", default=[], metavar="data=N",
+                    help="also bench device-sharded IVF snapshots on each "
+                         "N-way data mesh (data=1 = the unsharded "
+                         "baseline); on CPU set XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count=N first — entries "
+                         "document scaling shape + the sharded-vs-"
+                         "unsharded top-k parity, not absolute speed")
+    ap.add_argument("--mesh-merge", action="store_true",
+                    help="merge the --mesh entries into the existing --out "
+                         "JSON instead of re-running every section")
     ap.add_argument("--out", default=None,
                     help="output path (default: BENCH_retrieval.json next "
                          "to this file)")
     args = ap.parse_args(argv)
     if args.quick:
         args.iters = min(args.iters, 3)
+
+    mesh_plan = []                      # (spec, device list | None)
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_arg
+        for spec in dict.fromkeys(args.mesh):
+            m = parse_mesh_arg(spec)
+            mesh_plan.append(
+                (spec, None if m is None else list(m.devices.flat)))
+
+    def mesh_entries(n, x, q, ref_ids):
+        out = []
+        for spec, devs in mesh_plan:
+            for kind in ("ivf-flat", "ivf-pq"):
+                r = {"n": n, **bench_index(kind, x, q, ref_ids, k=args.k,
+                                           iters=args.iters, devices=devs,
+                                           mesh_label=spec)}
+                r.setdefault("mesh_devices", 1)      # the data=1 baseline
+                out.append(r)
+                parity = r.get("topk_matches_unsharded")
+                print(f"n={n:>7} {r['kind']:>16}: qps={r['qps']:>9} "
+                      f"recall@10={r['recall_at_10']:.3f}"
+                      + ("" if parity is None
+                         else f" topk==unsharded: {parity}"))
+        return out
+
+    if args.mesh_merge:
+        # record the mesh scaling entries into an EXISTING result file
+        # without re-running the expensive lifecycle/sweep/anchor sections
+        if not mesh_plan:
+            raise SystemExit("--mesh-merge requires --mesh")
+        out_p = pathlib.Path(args.out) if args.out else (
+            pathlib.Path(__file__).parent / "BENCH_retrieval.json")
+        if not out_p.exists():
+            raise SystemExit(f"--mesh-merge needs an existing {out_p}")
+        obs.reset()
+        fresh = []
+        for n in args.sizes:
+            x = make_vectors(n)
+            q = make_vectors(args.batch, seed=7)
+            oracle = serving.IndexBuilder("exact", x.shape[1]).build(
+                np.arange(1, n + 1), x)
+            _, ref_ids = oracle.search(q, args.k)
+            fresh.extend(mesh_entries(n, x, q, ref_ids))
+        doc = json.loads(out_p.read_text())
+        doc["results"] = [e for e in doc["results"]
+                          if "@data=" not in str(e.get("kind", ""))] + fresh
+        doc["config"]["mesh"] = {"specs": [s for s, _ in mesh_plan]}
+        out_p.write_text(json.dumps(doc, indent=2))
+        print(f"merged {len(fresh)} mesh entries into {out_p}")
+        return fresh
 
     obs.reset()
     results = []
@@ -345,6 +428,7 @@ def main(argv=None):
             print(f"n={n:>7} {r['kind']:>11}: qps={r['qps']:>9} "
                   f"recall@10={r['recall_at_10']:.3f} "
                   f"build={r['build_s']}s")
+        results.extend(mesh_entries(n, x, q, ref_ids))
         if not args.quick and not args.no_sweep and n == 8000:
             r = bench_scan_sweep(x, q, k=args.k)
             results.append(r)
@@ -367,7 +451,9 @@ def main(argv=None):
          "config": {"pq_scan_block_n": serving_index.PQ_SCAN_BLOCK_N,
                     "pq_scan_variant": serving_index.PQ_SCAN_VARIANT,
                     "dense_probe_factor": serving_index.DENSE_PROBE_FACTOR,
-                    "train_sample_coarse": 16384, "train_sample_pq": 8192},
+                    "train_sample_coarse": 16384, "train_sample_pq": 8192,
+                    **({"mesh": {"specs": [s for s, _ in mesh_plan]}}
+                       if mesh_plan else {})},
          "results": results}, indent=2))
     print(f"wrote {out}")
     return results

@@ -144,13 +144,17 @@ def legacy_loop(cfg, make_batcher, *, steps, epochs, repeats):
             "mean_loss_last10": round(float(np.mean(losses[-10:])), 4)}
 
 
-def trainer_loop(cfg, make_batcher, lcfg, *, steps, repeats):
-    trainer = training.get_trainer("speedyfeed", cfg=cfg)
-    # warm every bucket executable on synthetic batches (compile excluded)
+def trainer_loop(cfg, make_batcher, lcfg, *, steps, repeats, mesh=None):
+    trainer = training.get_trainer("speedyfeed", cfg=cfg, mesh=mesh)
+    # warm every bucket executable on synthetic batches (compile excluded);
+    # on a mesh the first step builds the sharded jit, and the uncommitted
+    # numpy batch is placed by its in_shardings
     state = trainer.init_state(0)
     for b in lcfg.buckets:
-        state, m = trainer.step(state, jax.device_put(_synth_batch(cfg, b)),
-                                bucket=b)
+        wb = _synth_batch(cfg, b)
+        if mesh is None:
+            wb = jax.device_put(wb)
+        state, m = trainer.step(state, wb, bucket=b)
     jax.block_until_ready(m["loss"])
     compiles_warm = dict(trainer.compile_counts)
 
@@ -175,6 +179,26 @@ def trainer_loop(cfg, make_batcher, lcfg, *, steps, repeats):
             "bucket_steps": {str(k): v
                              for k, v in res.bucket_steps.items()},
             "mean_loss_last10": round(float(np.mean(res.losses[-10:])), 4)}
+
+
+def mesh_sweep(cfg, make_batcher, lcfg, *, steps, repeats, specs):
+    """Trainer throughput per mesh size over the identical batch stream.
+
+    ``specs`` are launcher-style ``data=N`` strings; ``data=1`` runs the
+    exact mesh-less path (the scaling baseline).  On CPU the devices are
+    XLA-forced host slices of one physical machine, so the entries
+    document the SCALING SHAPE (and the sharded path's compile hygiene),
+    not absolute speed — N forced devices split the same cores N ways.
+    """
+    from repro.launch.mesh import parse_mesh_arg
+    out = {}
+    for spec in specs:
+        mesh = parse_mesh_arg(spec)
+        r = trainer_loop(cfg, make_batcher, lcfg, steps=steps,
+                         repeats=repeats, mesh=mesh)
+        r["mesh_devices"] = 1 if mesh is None else int(mesh.devices.size)
+        out[spec] = r
+    return out
 
 
 def obs_overhead_guard(cfg, make_batcher, lcfg, *, steps, repeats,
@@ -255,7 +279,7 @@ def attention_microbench(repeats=3, iters=5, seed=0):
 
 def run(epochs=2, repeats=2, seed=0, out=None, seg_len=32,
         attn_impls=("xla",), micro=True, obs_overhead=False,
-        obs_overhead_pct=2.0):
+        obs_overhead_pct=2.0, mesh=(), mesh_merge=False):
     # seg_len=32 -> the 4-bucket set (8, 16, 24, 32): the legacy loop pads
     # every sub-max bucket back to 32, the Trainer runs them at length.
     # The workload is the bucketed regime the paper targets (MIND-like:
@@ -274,6 +298,26 @@ def run(epochs=2, repeats=2, seed=0, out=None, seg_len=32,
 
     epoch_steps, bucket_mix = count_epoch_steps(make_batcher, epochs)
     steps = sum(epoch_steps)
+    by_mesh = mesh_sweep(cfgs[first], make_batcher, lcfg, steps=steps,
+                         repeats=repeats, specs=mesh) if mesh else None
+    if mesh_merge:
+        # record the mesh scaling entries into an EXISTING result file
+        # without re-running the (expensive) legacy/impl/microbench
+        # sections — the sweep replays the same deterministic stream, so
+        # its entries are comparable to the file's trainer numbers
+        if not (out and os.path.exists(out)):
+            raise SystemExit("--mesh-merge needs an existing --out JSON")
+        with open(out) as f:
+            result = json.load(f)
+        result["by_mesh"] = by_mesh or {}
+        result.setdefault("config", {})["mesh"] = {
+            "specs": list(mesh), "epochs": epochs, "steps": steps,
+            "repeats": repeats, "backend": jax.default_backend(),
+            "visible_devices": jax.device_count()}
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+        return result
     # every Trainer side (and the legacy loop) replays this same stream:
     # per-impl numbers are per unit of identical work
     by_impl = {impl: trainer_loop(cfgs[impl], make_batcher, lcfg,
@@ -294,6 +338,10 @@ def run(epochs=2, repeats=2, seed=0, out=None, seg_len=32,
         "trainer": new,
         "by_attn_impl": by_impl,
     }
+    if by_mesh:
+        result["by_mesh"] = by_mesh
+        result["config"]["mesh"] = {
+            "specs": list(mesh), "visible_devices": jax.device_count()}
     if "xla" in cfgs:
         legacy = legacy_loop(cfgs["xla"], make_batcher, steps=steps,
                              epochs=epochs, repeats=repeats)
@@ -331,6 +379,15 @@ def main():
                          "disabled and fail if instrumentation costs more "
                          "than --obs-overhead-pct steps/s")
     ap.add_argument("--obs-overhead-pct", type=float, default=2.0)
+    ap.add_argument("--mesh", nargs="+", default=[], metavar="data=N",
+                    help="run the Trainer side on each N-way data mesh "
+                         "(data=1 = the exact mesh-less baseline); on CPU "
+                         "set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first — entries document scaling shape, "
+                         "not absolute speed")
+    ap.add_argument("--mesh-merge", action="store_true",
+                    help="merge the --mesh sweep into the existing --out "
+                         "JSON instead of re-running every section")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "BENCH_train.json"))
     args = ap.parse_args()
@@ -338,7 +395,14 @@ def main():
                  out=args.out, seg_len=args.seg_len,
                  attn_impls=tuple(dict.fromkeys(args.attn_impl)),
                  micro=not args.no_micro, obs_overhead=args.obs_overhead,
-                 obs_overhead_pct=args.obs_overhead_pct)
+                 obs_overhead_pct=args.obs_overhead_pct,
+                 mesh=tuple(dict.fromkeys(args.mesh)),
+                 mesh_merge=args.mesh_merge)
+    for spec, r in result.get("by_mesh", {}).items():
+        print(f"train_throughput,mesh[{spec}]_steps_per_sec,"
+              f"{r['steps_per_sec']}")
+    if args.mesh_merge:
+        return
     print(json.dumps(result, indent=2))
     if "legacy_loop" in result:
         print(f"\ntrain_throughput,legacy_steps_per_sec,"

@@ -114,10 +114,19 @@ def restore(ckpt_dir: str, like, step: int | None = None, *,
     return step, jax.tree.unflatten(jax.tree.structure(like), leaves)
 
 
-def restore_sharded(ckpt_dir: str, like, shardings, step: int | None = None):
+def restore_sharded(ckpt_dir: str, like, shardings, step: int | None = None,
+                    *, aliases: dict | None = None, missing_ok=()):
     """Elastic restore: place restored arrays with the given shardings
-    (pytree of NamedSharding matching ``like``) — works across mesh changes."""
-    step, tree = restore(ckpt_dir, like, step)
+    (pytree of NamedSharding matching ``like``) — works across mesh changes.
+
+    Checkpoints are mesh-agnostic host npz arrays, so this is the one
+    conversion point in both directions: a single-device checkpoint lands
+    sharded on a mesh, and a sharded run's checkpoint (written from
+    fully-addressable arrays) lands on one device when ``shardings`` says
+    so.  ``aliases``/``missing_ok`` pass through to ``restore`` so layout
+    migrations work identically on the sharded path."""
+    step, tree = restore(ckpt_dir, like, step,
+                         aliases=aliases, missing_ok=missing_ok)
     placed = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
     return step, placed
 

@@ -81,6 +81,9 @@ def _sf_init_state(cfg, key) -> training.TrainState:
 def make_sf_trainer(cfg=None, **kw) -> training.Trainer:
     """Bucket-aware donated Trainer for Algorithm 1 (the registry entry the
     launchers use; PROD config unless overridden)."""
+    # mesh runs place the merged news set replicated (it feeds a global
+    # argsort) and shard the user axis — the H1 layout, not generic dim-0
+    kw.setdefault("batch_specs_fn", shx.speedyfeed_batch_specs)
     return training.Trainer(cfg if cfg is not None else PROD,
                             make_step=make_sf_train_step,
                             init_fn=_sf_init_state, **kw)

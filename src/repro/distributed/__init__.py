@@ -1,6 +1,7 @@
-from .sharding import (DATA_AXES, data_spec, gnn_batch_specs, gnn_rules,
-                       lm_batch_specs, lm_rules, named, recsys_batch_specs,
-                       recsys_rules, spec_tree, speedyfeed_cache_spec,
+from .sharding import (DATA_AXES, batch_specs, data_spec, gnn_batch_specs,
+                       gnn_rules, guard_divisible, lm_batch_specs, lm_rules,
+                       named, recsys_batch_specs, recsys_rules, spec_tree,
+                       speedyfeed_batch_specs, speedyfeed_cache_spec,
                        speedyfeed_rules)
 from .straggler import (StepTimeMonitor, WorkStealingQueue,
                         plan_elastic_mesh)

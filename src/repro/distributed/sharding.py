@@ -77,6 +77,44 @@ def named(mesh, specs):
                         is_leaf=lambda x: isinstance(x, P))
 
 
+def _axes_size(mesh, axes) -> int:
+    names = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = 1
+    for a in names:
+        size *= mesh.shape[a]
+    return size
+
+
+def guard_divisible(specs, tree, mesh):
+    """Per-leaf spec sanitizer: NamedSharding requires every sharded dim to
+    be divisible by its mesh-axis size product — a rule table can't know
+    leaf shapes, so axes that don't divide are dropped (that dim falls back
+    to replicated).  ``tree`` supplies shapes (arrays or ShapeDtypeStructs)
+    and must match ``specs`` structurally."""
+    def fix(spec, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        dims = list(spec) + [None] * (len(shape) - len(spec))
+        out = []
+        for i, axes in enumerate(dims[:len(shape)]):
+            keep = axes is not None and \
+                shape[i] % _axes_size(mesh, axes) == 0
+            out.append(axes if keep else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(mesh, batch_like):
+    """Dim-0 data-parallel specs for an arbitrary batch pytree, with the
+    divisibility guard applied (a leaf whose leading dim doesn't divide the
+    data-axis size is replicated rather than crashing device_put)."""
+    specs = jax.tree.map(
+        lambda leaf: data_spec(mesh) if getattr(leaf, "ndim", 0) else P(),
+        batch_like)
+    return guard_divisible(specs, batch_like, mesh)
+
+
 # ---------------------------------------------------------------------------
 # per-family rule tables
 # ---------------------------------------------------------------------------
@@ -187,3 +225,22 @@ def speedyfeed_rules(tp: bool = False):
 
 def speedyfeed_cache_spec(mesh):
     return {"emb": data_spec(mesh, None), "written_step": data_spec(mesh)}
+
+
+def speedyfeed_batch_specs(mesh, batch_like):
+    """Centralized-batch specs matching the production dry-run layout:
+    the merged news set (``news_*``) stays REPLICATED — it feeds a global
+    argsort over the whole merged set — while the per-user history side
+    shards its leading dim over every mesh axis (pure DP, H1-3).  The
+    divisibility guard keeps odd shapes placeable."""
+    all_ax = tuple(mesh.axis_names)
+
+    def spec(path, leaf):
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in path)
+        if name.split("/")[-1].startswith("news_"):
+            return P()
+        return P(all_ax) if getattr(leaf, "ndim", 0) else P()
+
+    specs = jax.tree_util.tree_map_with_path(spec, batch_like)
+    return guard_divisible(specs, batch_like, mesh)

@@ -45,20 +45,24 @@ class StepTimeMonitor:
         """Return per-host microbatch counts keeping the global sum fixed.
 
         Each straggler sheds one microbatch per call; the fastest hosts pick
-        them up. Never drops a host below 1 microbatch."""
+        them up. Never drops a host below 1 microbatch.  A shed is only
+        committed when a receiver exists — with no non-straggler host the
+        microbatch stays on the straggler (the global batch is invariant,
+        so work may never evaporate)."""
         total = microbatches_per_host * self.n_hosts
         alloc = [microbatches_per_host] * self.n_hosts
-        slow = self.stragglers()
+        slow = set(self.stragglers())
         if not slow:
             return alloc
-        order = sorted(range(self.n_hosts),
-                       key=lambda i: self.ema[i] if self.ema[i] else 0.0)
-        fast = [i for i in order if i not in slow]
+        # receivers, fastest first; hosts with no EMA yet go LAST (an
+        # unknown host is not evidence of speed)
+        fast = sorted((i for i in range(self.n_hosts) if i not in slow),
+                      key=lambda i: (self.ema[i] is None, self.ema[i] or 0.0))
         fi = 0
-        for s in slow:
+        for s in sorted(slow):
             if alloc[s] > 1 and fast:
-                alloc[s] -= 1
-                alloc[fast[fi % len(fast)]] += 1
+                alloc[fast[fi % len(fast)]] += 1   # receiver first:
+                alloc[s] -= 1                      # shed only when received
                 fi += 1
         assert sum(alloc) == total
         return alloc
@@ -69,30 +73,38 @@ class WorkStealingQueue:
 
     def __init__(self, n_shards: int):
         self._qs = [collections.deque() for _ in range(n_shards)]
-        self._lock = threading.Lock()
+        self._cv = threading.Condition()
         self.steals = 0
 
     def put(self, shard: int, item):
-        with self._lock:
+        with self._cv:
             self._qs[shard].append(item)
+            self._cv.notify_all()
 
     def get(self, shard: int, *, timeout: float = 0.0):
+        """Pop from own shard (FIFO), else steal the tail of the deepest
+        OTHER shard's backlog.  Own-shard pops are never counted as steals
+        (the old scan included ``shard`` in the victim search, so a consumer
+        could "steal" its own tail).  Blocks on a condition variable until
+        an item arrives or ``timeout`` elapses — no busy-spin."""
         deadline = time.monotonic() + timeout
-        while True:
-            with self._lock:
+        with self._cv:
+            while True:
                 if self._qs[shard]:
                     return self._qs[shard].popleft()
-                victim = max(range(len(self._qs)),
-                             key=lambda i: len(self._qs[i]))
-                if self._qs[victim]:
+                victims = [i for i in range(len(self._qs))
+                           if i != shard and self._qs[i]]
+                if victims:
+                    victim = max(victims, key=lambda i: len(self._qs[i]))
                     self.steals += 1
                     return self._qs[victim].pop()   # steal from the tail
-            if time.monotonic() >= deadline:
-                return None
-            time.sleep(0.001)
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self._cv.wait(remaining)
 
     def qsize(self):
-        with self._lock:
+        with self._cv:
             return sum(len(q) for q in self._qs)
 
 

@@ -35,6 +35,34 @@ def make_mesh_for(n_devices: int, *, model: int = 1):
     return _mk((n_devices // model, model), ("data", "model"))
 
 
+def parse_mesh_arg(spec: str | None):
+    """``--mesh data=N`` -> Mesh (or None for N==1 / no flag).
+
+    N==1 maps to None on purpose: mesh-less is the exact pre-mesh code
+    path (no sharded jit, no placement), so a default launch stays
+    bit-for-bit what it was.  Requires the process to actually have N
+    devices — on CPU set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before any jax import.
+    """
+    if spec is None:
+        return None
+    try:
+        axis, n = spec.split("=")
+        n = int(n)
+    except ValueError:
+        raise SystemExit(f"--mesh expects AXIS=N (e.g. data=8), got {spec!r}")
+    if axis != "data":
+        raise SystemExit(f"--mesh supports only the data axis, got {axis!r}")
+    if n <= 1:
+        return None
+    have = jax.device_count()
+    if have < n:
+        raise SystemExit(
+            f"--mesh data={n} but only {have} device(s) visible; on CPU "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return make_mesh_for(n)
+
+
 def set_mesh(mesh):
     """Context manager making ``mesh`` ambient, across jax versions:
     jax.set_mesh (new) > jax.sharding.use_mesh > `with mesh:` (legacy)."""

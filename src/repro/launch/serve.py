@@ -77,7 +77,7 @@ class Recommender:
     def __init__(self, cfg: core.SpeedyFeedConfig, params, store, *, k=10,
                  index_kind: str = "ivf-pq", nprobe: int = 8,
                  k_prime: int | None = None, compact_threshold: int = 512,
-                 probe_metric: str = "ip"):
+                 probe_metric: str = "ip", mesh=None):
         # probe_metric: the launcher serves raw MIPS over unnormalized
         # encoder embeddings — direction-concentrated, norm-heterogeneous —
         # where ranking cells by raw inner product recalls the large-norm
@@ -88,6 +88,9 @@ class Recommender:
         self.index_kind = index_kind
         self.nprobe = nprobe
         self.probe_metric = probe_metric
+        # device-sharded index: CSR rows partition across the mesh's
+        # devices (docs/sharding.md); None = single-device snapshots
+        self.mesh = mesh
         self.k_prime = k_prime or max(4 * k, 32)
         self.compact_threshold = compact_threshold
         self.service: serving.RetrievalService | None = None
@@ -125,12 +128,15 @@ class Recommender:
         emb = self._encode_corpus(chunk=chunk)
         n = emb.shape[0]
         nlist = max(4, min(64, n // 32))
+        devices = None
+        if self.mesh is not None and self.index_kind != "exact":
+            devices = list(self.mesh.devices.flat)
         builder = serving.IndexBuilder(
             self.index_kind, emb.shape[1],
             ivf=serving.IVFConfig(nlist=nlist,
                                   nprobe=min(self.nprobe, nlist),
                                   metric=self.probe_metric),
-            seed=seed)
+            seed=seed, devices=devices)
         self.service = serving.RetrievalService(
             builder, emb, k=self.k, k_prime=min(self.k_prime, n - 1),
             compact_threshold=self.compact_threshold, auto_compact=False)
@@ -284,7 +290,14 @@ def main(argv=None):
                          "(and periodically if --metrics-every > 0)")
     ap.add_argument("--metrics-every", type=float, default=0.0,
                     help="periodic in-loop snapshot cadence, seconds")
+    ap.add_argument("--mesh", default=None, metavar="data=N",
+                    help="shard the IVF index's CSR rows across an N-way "
+                         "data mesh (data=1 / omitted = single-device "
+                         "snapshots); on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args(argv)
+    from repro.launch.mesh import parse_mesh_arg
+    mesh = parse_mesh_arg(args.mesh)
 
     # one launcher run = one registry's worth of numbers (tests invoke
     # main() in-process; without the reset a second run would report the
@@ -309,7 +322,7 @@ def main(argv=None):
         params, _ = core.speedyfeed_state(cfg)
     rec = Recommender(cfg, params, store, k=args.k, index_kind=args.index,
                       nprobe=args.nprobe, k_prime=args.k_prime,
-                      probe_metric=args.probe_metric)
+                      probe_metric=args.probe_metric, mesh=mesh)
     t0 = time.time()
     rec.build_index()
     svc = rec.service

@@ -61,11 +61,12 @@ def train_speedyfeed(*, steps: int, ckpt_dir: str | None = None,
                      ckpt_every: int = 50, seed: int = 0, cfg=None,
                      fail_at: int | None = None, log_every: int = 20,
                      async_ckpt: bool = True,
-                     prefetch_depth: int = 2) -> TrainResult:
-    """The end-to-end driver. ``fail_at`` injects a crash (restart tests)."""
+                     prefetch_depth: int = 2, mesh=None) -> TrainResult:
+    """The end-to-end driver. ``fail_at`` injects a crash (restart tests).
+    ``mesh`` runs the sharded Trainer path (see docs/sharding.md)."""
     cfg = cfg or small_speedyfeed_config()
     corpus, log, store, lcfg = make_loader(cfg, seed=seed)
-    trainer = training.get_trainer("speedyfeed", cfg=cfg)
+    trainer = training.get_trainer("speedyfeed", cfg=cfg, mesh=mesh)
 
     def make_batcher(epoch: int):
         return data.DynamicBatcher(log, store, lcfg, n_threads=2,
@@ -89,14 +90,21 @@ def main():
                          "(periodic + one final)")
     ap.add_argument("--metrics-every", type=float, default=10.0,
                     help="periodic snapshot cadence, seconds")
+    ap.add_argument("--mesh", default=None, metavar="data=N",
+                    help="train on an N-way data mesh (data=1 / omitted = "
+                         "the exact single-device path); on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
+    from repro.launch.mesh import parse_mesh_arg
+    mesh = parse_mesh_arg(args.mesh)
     obs.reset()      # this run's registry export is exactly this run
     if args.metrics_out:
         obs.configure_reporter(path=args.metrics_out,
                                every_s=args.metrics_every)
     if args.arch == "speedyfeed":
         res = train_speedyfeed(steps=args.steps, ckpt_dir=args.ckpt_dir,
-                               ckpt_every=args.ckpt_every, seed=args.seed)
+                               ckpt_every=args.ckpt_every, seed=args.seed,
+                               mesh=mesh)
         loss = (f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}; "
                 if res.losses else "no new steps (already trained); ")
         print(f"done: {res.steps_done} steps in {res.wall_seconds:.1f}s; "

@@ -12,6 +12,8 @@ from .pq import (PQCodebook, PQConfig, fit_kmeans, kmeans, kmeans_minibatch,
                  opq_train, pq_decode, pq_encode, pq_lut, pq_search, pq_train,
                  sample_rows)
 from .service import RetrievalService, ServiceView
+from .sharded import (ShardedIndexSnapshot, shard_mesh, shard_snapshot,
+                      unshard_snapshot)
 from .snapshot import IndexSnapshot, empty_snapshot, snapshot_from_index
 from .store import EmbeddingStore
 from .tune import TuneResult, autotune, tune_service

@@ -46,12 +46,24 @@ class IndexBuilder:
     """
 
     def __init__(self, kind: str, dim: int, *, ivf: IVFConfig = IVFConfig(),
-                 pq: PQConfig = PQConfig(), seed: int = 0):
+                 pq: PQConfig = PQConfig(), seed: int = 0, devices=None):
         if kind not in KINDS:
             raise ValueError(f"unknown index kind: {kind!r}")
+        if devices is not None and kind == "exact":
+            raise ValueError("the exact kind has no CSR rows to shard; "
+                             "use an IVF kind with devices=")
         self.kind, self.dim = kind, dim
         self.ivf, self.pq = ivf, pq
         self.seed = seed
+        # device sharding: with a device list, every frozen snapshot comes
+        # back as a ShardedIndexSnapshot whose CSR rows are partitioned
+        # across ONE mesh held for the builder's lifetime — rebuilds land
+        # on the same mesh, so the same warm (kind, cap, shard-count)
+        # executables serve every snapshot generation
+        self.mesh = None
+        if devices is not None:
+            from .sharded import shard_mesh
+            self.mesh = shard_mesh(devices)
         self._versions = itertools.count(1)    # next() is atomic under GIL
 
     def empty(self) -> IndexSnapshot:
@@ -76,7 +88,7 @@ class IndexBuilder:
             idx.train(key, jnp.asarray(emb))
             with obs.span("index_build_encode", kind=self.kind):
                 idx.add(ids, emb)
-        return snapshot_from_index(idx, next(self._versions), time.time())
+        return self._freeze(idx)
 
     def compact(self, snapshot: IndexSnapshot, ids, emb) -> IndexSnapshot:
         """Absorb fresh rows into ``snapshot`` without retraining.
@@ -96,12 +108,24 @@ class IndexBuilder:
         with obs.span("index_compact", kind=self.kind):
             idx = self._materialize(snapshot)
             idx.add(ids, emb)
-        return snapshot_from_index(idx, next(self._versions), time.time())
+        return self._freeze(idx)
+
+    def _freeze(self, idx):
+        """Snapshot the index; with a mesh, shard the frozen CSR rows."""
+        snap = snapshot_from_index(idx, next(self._versions), time.time())
+        if self.mesh is None or snap.kind == "exact":
+            return snap
+        from .sharded import shard_snapshot
+        return shard_snapshot(snap, self.mesh)
 
     def _materialize(self, snap: IndexSnapshot):
         """Mutable index aliasing a snapshot's arrays (cheap: references
         only — safe because every index mutation rebinds, never writes in
-        place, so the source snapshot stays frozen)."""
+        place, so the source snapshot stays frozen).  A sharded snapshot is
+        reassembled first (host gather — compaction is off-path work)."""
+        from .sharded import ShardedIndexSnapshot, unshard_snapshot
+        if isinstance(snap, ShardedIndexSnapshot):
+            snap = unshard_snapshot(snap)
         if snap.kind != self.kind:
             raise ValueError(
                 f"snapshot kind {snap.kind!r} != builder kind {self.kind!r}")

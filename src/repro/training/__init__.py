@@ -41,5 +41,6 @@ so old snapshots restore into the new runtime unchanged.
 from .prefetch import STREAM_END, DevicePrefetcher, PrefetchedBatch
 from .registry import get_trainer, register_trainer, registered_trainers
 from .state import (CKPT_ALIASES, TrainState, from_ckpt_tree, make_state,
-                    restore_state, save_state, to_ckpt_tree)
+                    restore_state, save_state, state_shardings, state_specs,
+                    to_ckpt_tree)
 from .trainer import CompileCounter, MetricsBuffer, Trainer, TrainResult

@@ -46,12 +46,17 @@ class DevicePrefetcher:
 
     def __init__(self, make_batcher, *, depth: int = 2,
                  max_epochs: int | None = None, device=None,
-                 poll: float = 0.25):
+                 poll: float = 0.25, sharding=None):
         self._make = make_batcher
         self._depth = depth
         self._max_epochs = max_epochs
         self._device = device
         self._poll = poll
+        # mesh placement: a Sharding applied to every leaf, or a callable
+        # ``(arrays) -> pytree of Shardings`` (the Trainer passes its batch
+        # sharding builder) — batches land committed to their final layout,
+        # so the step jit never reshards input
+        self._sharding = sharding
         self._q = queue.Queue(maxsize=max(1, depth))
         self._stop = threading.Event()
         self._finished = threading.Event()
@@ -91,8 +96,13 @@ class DevicePrefetcher:
                 bucket = int(item.pop("_bucket",
                                       (stats or {}).get("seg_len", 0)))
                 with obs.span("prefetch_h2d"):
-                    arrays = {k: jax.device_put(v, self._device)
-                              for k, v in item.items()}
+                    if self._sharding is not None:
+                        target = self._sharding(item) \
+                            if callable(self._sharding) else self._sharding
+                        arrays = jax.device_put(item, target)
+                    else:
+                        arrays = {k: jax.device_put(v, self._device)
+                                  for k, v in item.items()}
                 pb = PrefetchedBatch(bucket, arrays, stats, epoch)
                 while not self._stop.is_set():
                     try:

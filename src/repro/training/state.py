@@ -67,10 +67,60 @@ def save_state(ckpt_dir: str, step: int, state: TrainState, *,
         ckpt.save(ckpt_dir, step, tree, keep=keep)
 
 
-def restore_state(ckpt_dir: str, like: TrainState,
-                  step: int | None = None) -> tuple[int, TrainState]:
+def restore_state(ckpt_dir: str, like: TrainState, step: int | None = None,
+                  *, shardings: "TrainState | None" = None
+                  ) -> tuple[int, TrainState]:
     """Restore a TrainState; accepts both the current layout and the legacy
-    ``{params, opt, cache: {emb, age}}`` layout (no step/rng leaves)."""
-    step, tree = ckpt.restore(ckpt_dir, to_ckpt_tree(like), step,
-                              aliases=CKPT_ALIASES, missing_ok=CKPT_OPTIONAL)
-    return step, from_ckpt_tree(tree, step)
+    ``{params, opt, cache: {emb, age}}`` layout (no step/rng leaves).
+
+    ``shardings`` (a TrainState-shaped pytree of NamedSharding) restores
+    every leaf directly onto its mesh placement — the checkpoint format is
+    mesh-agnostic (plain host arrays), so a single-device checkpoint
+    restores onto an 8-way mesh and a sharded run's checkpoint restores
+    onto one device without conversion."""
+    if shardings is None:
+        step, tree = ckpt.restore(
+            ckpt_dir, to_ckpt_tree(like), step,
+            aliases=CKPT_ALIASES, missing_ok=CKPT_OPTIONAL)
+    else:
+        step, tree = ckpt.restore_sharded(
+            ckpt_dir, to_ckpt_tree(like), to_ckpt_tree(shardings), step,
+            aliases=CKPT_ALIASES, missing_ok=CKPT_OPTIONAL)
+    state = from_ckpt_tree(tree, step)
+    if shardings is not None:
+        # from_ckpt_tree mints the step scalar fresh (the directory step is
+        # authoritative), so place it back onto the mesh with its siblings
+        state = state._replace(
+            step=jax.device_put(state.step, shardings.step))
+    return step, state
+
+
+# ---------------------------------------------------------------------------
+# mesh placement
+# ---------------------------------------------------------------------------
+
+def state_specs(like: TrainState, mesh) -> TrainState:
+    """PartitionSpecs for a speedyfeed-family TrainState on ``mesh``.
+
+    Pure DP per ``speedyfeed_rules(tp=False)``: params and optimizer
+    moments replicated, the news-embedding cache row-sharded over the data
+    axes (``speedyfeed_cache_spec``), step/rng replicated.  The
+    divisibility guard drops any axis that does not divide its dim (e.g. a
+    cache whose n_news is not a multiple of the data-axis size falls back
+    to replicated instead of crashing placement)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shx
+
+    params_spec = shx.spec_tree(like.params, shx.speedyfeed_rules())
+    opt_spec = {"m": params_spec, "v": params_spec, "count": P()}
+    cs = shx.speedyfeed_cache_spec(mesh)
+    cache_spec = CacheState(cs["emb"], cs["written_step"])
+    specs = TrainState(params_spec, opt_spec, cache_spec, P(), P())
+    return shx.guard_divisible(specs, like, mesh)
+
+
+def state_shardings(like: TrainState, mesh) -> TrainState:
+    """NamedShardings for ``like`` on ``mesh`` (see ``state_specs``)."""
+    from repro.distributed import sharding as shx
+    return shx.named(mesh, state_specs(like, mesh))

@@ -202,12 +202,27 @@ class Trainer:
     ``training.get_trainer``).
     """
 
-    def __init__(self, cfg, *, make_step, init_fn, donate: bool = True):
+    def __init__(self, cfg, *, make_step, init_fn, donate: bool = True,
+                 mesh=None, batch_specs_fn=None):
         self.cfg = cfg
         self._raw_step = make_step(cfg)
         self._init_fn = init_fn
-        self._step_jit = jax.jit(
-            self._state_step, donate_argnums=(0,) if donate else ())
+        self._donate = donate
+        self.mesh = mesh
+        # (mesh, batch_like) -> PartitionSpec tree; default is the generic
+        # dim-0 data-parallel layout (distributed.sharding.batch_specs)
+        self._batch_specs_fn = batch_specs_fn
+        if mesh is None:
+            # single-device path: identical to the pre-mesh Trainer — the
+            # jit exists from __init__ and nothing consults the mesh again
+            self._step_jit = jax.jit(
+                self._state_step, donate_argnums=(0,) if donate else ())
+        else:
+            # sharded path: the jit is built on the first step, once the
+            # concrete state/batch pytree structure is known (in/out
+            # shardings are full pytrees of NamedSharding)
+            self._step_jit = None
+        self.state_shardings: TrainState | None = None
         self.compile_counts: dict = {}    # bucket -> backend compiles
         self.bucket_steps: dict = {}      # bucket -> steps run
         self.monitor: StepTimeMonitor | None = None   # set by fit()
@@ -234,9 +249,55 @@ class Trainer:
     def init_state(self, seed: int = 0) -> TrainState:
         return self._init_fn(self.cfg, jax.random.PRNGKey(seed))
 
+    # -- mesh placement -----------------------------------------------------
+
+    def _ensure_state_shardings(self, state: TrainState) -> TrainState:
+        """Compute (once) the TrainState NamedShardings for ``self.mesh``."""
+        if self.state_shardings is None:
+            from .state import state_shardings
+            self.state_shardings = state_shardings(state, self.mesh)
+        return self.state_shardings
+
+    def place_state(self, state: TrainState) -> TrainState:
+        """Commit a state onto the mesh (no-op without one)."""
+        if self.mesh is None:
+            return state
+        return jax.device_put(state, self._ensure_state_shardings(state))
+
+    def batch_shardings(self, batch):
+        """NamedShardings for a batch pytree on the mesh (the prefetcher
+        calls this per batch so batches arrive committed to their final
+        layout)."""
+        from repro.distributed import sharding as shx
+        fn = self._batch_specs_fn or shx.batch_specs
+        return shx.named(self.mesh, fn(self.mesh, batch))
+
+    def _build_mesh_jit(self, state: TrainState, batch) -> TrainState:
+        """First-step jit construction on the sharded path: pin the donated
+        state's in/out shardings to the same placement (donation requires
+        matching layouts) and replicate the scalar metrics.  Returns
+        ``state`` committed to its shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        state_sh = self._ensure_state_shardings(state)
+        state = jax.device_put(state, state_sh)
+        batch_sh = self.batch_shardings(batch)
+        metrics_abs = jax.eval_shape(self._state_step, state, batch)[1]
+        rep = NamedSharding(self.mesh, P())
+        metrics_sh = jax.tree.map(lambda _: rep, metrics_abs)
+        self._step_jit = jax.jit(
+            self._state_step,
+            donate_argnums=(0,) if self._donate else (),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh))
+        return state
+
+    # -- step ---------------------------------------------------------------
+
     def step(self, state: TrainState, batch: dict, bucket=None):
         """One donated train step. ``state`` is consumed (its buffers are
         donated to the executable) — use only the returned state."""
+        if self._step_jit is None:            # sharded path, first step
+            state = self._build_mesh_jit(state, batch)
         if bucket is not None and bucket not in self.compile_counts:
             with CompileCounter() as cc:
                 out = self._step_jit(state, batch)
@@ -257,20 +318,38 @@ class Trainer:
             seed: int = 0, ckpt_dir: str | None = None, ckpt_every: int = 50,
             async_ckpt: bool = True, log_every: int = 20,
             fail_at: int | None = None, prefetch_depth: int = 2,
-            batch_timeout: float = 60.0) -> TrainResult:
+            batch_timeout: float = 60.0, hosts: int | None = None,
+            microbatches_per_host: int = 1) -> TrainResult:
         """Train for ``steps`` total steps (resuming from the latest
         checkpoint in ``ckpt_dir`` when one exists).
 
         ``make_batcher(epoch)`` -> started DynamicBatcher; epochs roll over
         inside the prefetcher. ``fail_at`` injects a crash after that many
         total steps (restart tests).
+
+        ``hosts`` (default: ``jax.process_count()``) sets the straggler
+        monitor's host count; with more than one (real processes, or
+        simulated hosts for single-process runs) per-step wall times are
+        attributed round-robin to hosts and the monitor's ``stragglers()``/
+        ``rebalance(microbatches_per_host)`` outputs surface as the
+        ``straggler_hosts`` / ``microbatch_alloc{host=}`` obs gauges at the
+        drain cadence.
         """
         t0 = time.time()
         cc0, bs0 = dict(self.compile_counts), dict(self.bucket_steps)
         state = state if state is not None else self.init_state(seed)
         resumed = None
         if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
-            resumed, state = restore_state(ckpt_dir, state)
+            if self.mesh is not None:
+                # restore leaves directly onto their mesh placement — a
+                # single-device checkpoint lands sharded, and vice versa
+                resumed, state = restore_state(
+                    ckpt_dir, state,
+                    shardings=self._ensure_state_shardings(state))
+            else:
+                resumed, state = restore_state(ckpt_dir, state)
+        elif self.mesh is not None:
+            state = self.place_state(state)
         step = int(state.step)
 
         # a resumed run must not replay the pre-crash batch stream: offset
@@ -279,9 +358,12 @@ class Trainer:
         epoch0 = step if resumed is not None else 0
         writer = ckpt.AsyncCheckpointer(ckpt_dir) \
             if (ckpt_dir and async_ckpt) else None
-        prefetcher = DevicePrefetcher(lambda e: make_batcher(e + epoch0),
-                                      depth=prefetch_depth).start()
-        monitor = StepTimeMonitor(n_hosts=1)
+        prefetcher = DevicePrefetcher(
+            lambda e: make_batcher(e + epoch0), depth=prefetch_depth,
+            sharding=self.batch_shardings if self.mesh is not None
+            else None).start()
+        n_hosts = hosts if hosts is not None else jax.process_count()
+        monitor = StepTimeMonitor(n_hosts=max(n_hosts, 1))
         buf = MetricsBuffer(on_drain=_feed_cache_obs)
         stall, de_sum, de_n = 0.0, 0.0, 0
         drain_mark, drain_step = time.perf_counter(), step
@@ -315,6 +397,12 @@ class Trainer:
                         "train_steps_total", bucket=b)
                 hist.observe((time.perf_counter() - t_iter) * 1e3)
                 step_ctrs[pb.bucket].inc()
+                if monitor.n_hosts > 1:
+                    # simulated multi-host: attribute per-step loop wall
+                    # round-robin (real multi-process runs would record
+                    # their own host id here)
+                    monitor.record((step - 1) % monitor.n_hosts,
+                                   time.perf_counter() - t_iter)
                 obs.tick()
                 if fail_at is not None and step >= fail_at:
                     raise RuntimeError("injected failure")
@@ -322,12 +410,22 @@ class Trainer:
                     save_state(ckpt_dir, step, state, writer=writer)
                 if log_every and step % log_every == 0:
                     m = buf.drain()
-                    # per-step dispatch time is meaningless on the async
-                    # path; feed the straggler EMA true wall/step at the
-                    # (blocking) drain cadence instead
                     now = time.perf_counter()
-                    monitor.record(0, (now - drain_mark)
-                                   / max(step - drain_step, 1))
+                    if monitor.n_hosts == 1:
+                        # per-step dispatch time is meaningless on the
+                        # async path; feed the straggler EMA true
+                        # wall/step at the (blocking) drain cadence
+                        monitor.record(0, (now - drain_mark)
+                                       / max(step - drain_step, 1))
+                    else:
+                        # multi-host: per-step times were recorded in the
+                        # loop; export the control-plane decisions
+                        slow = monitor.stragglers()
+                        obs.gauge("straggler_hosts").set(float(len(slow)))
+                        for h, a in enumerate(
+                                monitor.rebalance(microbatches_per_host)):
+                            obs.gauge("microbatch_alloc",
+                                      host=str(h)).set(float(a))
                     drain_mark, drain_step = now, step
                     print(f"step {step}: loss={m.get('loss', 0):.4f} "
                           f"acc={m.get('ar_acc', 0):.3f} "

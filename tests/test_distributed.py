@@ -107,3 +107,135 @@ def test_activation_constraint_noop_without_registration():
     x = jnp.ones((4, 4))
     shx.set_activation_specs({})
     assert shx.constrain(x, "residual") is x
+
+
+# ---------------------------------------------------------------------------
+# sharding-rule machinery (mesh-free: fake meshes carry only axis_names /
+# shape, which is all the spec helpers consult — no devices needed)
+# ---------------------------------------------------------------------------
+
+from types import SimpleNamespace
+
+from jax.sharding import PartitionSpec as P
+
+
+def _fake_mesh(**axes):
+    return SimpleNamespace(axis_names=tuple(axes), shape=dict(axes))
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_spec_tree_first_match_wins():
+    pa = {"attn": {"q": {"w": _sds(4, 8)}}}
+    # both rules match "attn/q/w"; the FIRST in the table must win
+    specs = shx.spec_tree(pa, [(r"q/w$", P(None, "model")),
+                               (r"w$", P("model", None))])
+    assert specs["attn"]["q"]["w"] == P(None, "model")
+    flipped = shx.spec_tree(pa, [(r"w$", P("model", None)),
+                                 (r"q/w$", P(None, "model"))])
+    assert flipped["attn"]["q"]["w"] == P("model", None)
+
+
+def test_spec_tree_default_is_replicated():
+    specs = shx.spec_tree({"b": _sds(8)}, [(r"nomatch", P("model"))])
+    assert specs["b"] == P()
+
+
+def test_fit_is_right_anchored():
+    # stacked-layer params add LEADING dims: the spec pads with Nones on
+    # the left, keeping the rule anchored to the trailing weight dims
+    assert shx._fit(P("model", None), _sds(3, 4, 8)) == P(None, "model", None)
+    assert shx._fit(P("model", None), _sds(4, 8)) == P("model", None)
+    # lower-rank leaves keep the TRAILING spec entries
+    assert shx._fit(P("model", None), _sds(8)) == P(None)
+    assert shx._fit(P("model"), _sds()) == P()
+
+
+def test_data_spec_uses_present_axis_subset():
+    assert shx.data_spec(_fake_mesh(data=4, model=2)) == P(("data",))
+    assert shx.data_spec(_fake_mesh(pod=2, data=4, model=2)) == \
+        P(("pod", "data"))
+    assert shx.data_spec(_fake_mesh(model=2)) == P(None)
+    assert shx.data_spec(_fake_mesh(data=4), None) == P(("data",), None)
+
+
+def test_guard_divisible_drops_nondividing_axes():
+    mesh = _fake_mesh(data=4, model=2)
+    specs = {"a": P("data", None), "b": P("data"), "c": P(("data", "model"))}
+    tree = {"a": _sds(8, 3), "b": _sds(6), "c": _sds(16)}
+    out = shx.guard_divisible(specs, tree, mesh)
+    assert out["a"] == P("data", None)        # 8 % 4 == 0: kept
+    assert out["b"] == P(None)                # 6 % 4 != 0: replicated
+    assert out["c"] == P(("data", "model"))   # 16 % (4*2) == 0: kept
+    # a spec shorter than the leaf rank pads with replicated trailing dims
+    assert shx.guard_divisible({"d": P("data")}, {"d": _sds(4, 5)},
+                               mesh)["d"] == P("data", None)
+
+
+def test_speedyfeed_batch_specs_replicates_news_side():
+    mesh = _fake_mesh(data=4)
+    batch = {"news_tokens": _sds(256, 3, 16), "news_ids": _sds(301),
+             "hist_inv": _sds(16, 30), "hist_mask": _sds(16, 30)}
+    specs = shx.speedyfeed_batch_specs(mesh, batch)
+    # merged news set replicated (feeds a global argsort) ...
+    assert specs["news_tokens"] == P(None, None, None)
+    assert specs["news_ids"] == P(None)
+    # ... user side sharded over every mesh axis on dim 0
+    assert specs["hist_inv"] == P(("data",), None)
+    assert specs["hist_mask"] == P(("data",), None)
+
+
+def test_plan_elastic_mesh_edges():
+    assert plan_elastic_mesh(16, model=16) == (1, 16)      # exactly minimal
+    assert plan_elastic_mesh(15, model=16) is None
+    assert plan_elastic_mesh(33, model=16) == (2, 16)      # floor division
+    assert plan_elastic_mesh(32, model=8, min_data=2) == (4, 8)
+    assert plan_elastic_mesh(8, model=8, min_data=2) is None
+
+
+# ---------------------------------------------------------------------------
+# straggler control plane + work stealing
+# ---------------------------------------------------------------------------
+
+def test_work_stealing_no_self_steal():
+    q = WorkStealingQueue(2)
+    for i in range(3):
+        q.put(0, i)
+    assert [q.get(0, timeout=0.1) for _ in range(3)] == [0, 1, 2]  # FIFO
+    assert q.steals == 0            # own-shard pops are never steals
+
+
+def test_work_stealing_blocks_on_condvar():
+    import threading
+    import time
+    q = WorkStealingQueue(2)
+    threading.Timer(0.05, lambda: q.put(1, "x")).start()
+    t0 = time.monotonic()
+    got = q.get(0, timeout=5.0)     # sleeps on the CV until the put
+    dt = time.monotonic() - t0
+    assert got == "x" and q.steals == 1
+    assert 0.04 <= dt < 4.0         # woke on notify, not on timeout
+
+
+def test_rebalance_without_receiver_keeps_microbatch():
+    # every host flagged slow -> no receiver exists; the shed microbatch
+    # must stay on the straggler (work may never evaporate)
+    mon = StepTimeMonitor(3)
+    mon.stragglers = lambda: [0, 1, 2]
+    assert mon.rebalance(2) == [2, 2, 2]
+
+
+def test_rebalance_unknown_ema_hosts_receive_last():
+    mon = StepTimeMonitor(4)
+    for _ in range(5):
+        mon.record(0, 3.0)          # straggler
+        mon.record(2, 1.0)
+        mon.record(3, 1.0)
+    # host 1 never recorded: an unknown host is not evidence of speed, so
+    # the shed microbatch goes to a measured-fast host instead
+    assert mon.stragglers() == [0]
+    alloc = mon.rebalance(2)
+    assert alloc[0] == 1 and alloc[1] == 2 and sum(alloc) == 8
+    assert alloc[2] == 3
