@@ -1,2 +1,2 @@
-from .ckpt import (AsyncCheckpointer, latest_step, restore, restore_sharded,
-                   save)
+from .ckpt import (AsyncCheckpointer, CheckpointCorruptError, all_steps,
+                   latest_step, restore, restore_sharded, save)

@@ -1,11 +1,22 @@
 """Checkpointing: sharded-friendly npz snapshots with atomic rename,
-keep-last-k retention, async writes, and elastic restore onto a new mesh.
+per-array checksums, keep-last-k retention, async writes, and elastic
+restore onto a new mesh.
 
 Layout:  <dir>/step_<N>/arrays.npz + manifest.json ; <dir>/LATEST.
 
-Fault-tolerance contract (tested in tests/test_checkpoint.py):
-  * a checkpoint is visible only after its atomic rename -> a killed writer
-    never corrupts the latest checkpoint;
+Fault-tolerance contract (tested in tests/test_checkpoint.py +
+tests/test_resilience.py):
+  * a checkpoint is visible only after its atomic rename -> a writer
+    killed mid-write never corrupts the latest checkpoint;
+  * ``manifest.json`` records a crc32 per array; ``restore`` verifies
+    every array it reads and treats a mismatch (or an unreadable npz /
+    manifest) as *corruption*, not a crash: the snapshot is quarantined
+    (renamed ``corrupt_step_<N>``) and restore falls back to the newest
+    remaining valid step.  Only an explicitly requested ``step=`` raises
+    ``CheckpointCorruptError`` directly;
+  * ``AsyncCheckpointer`` never loses a writer error on its thread: the
+    failure is counted (``ckpt_write_failures_total``) and warned about
+    immediately, and re-raised from the next ``wait()``/``save()``;
   * ``restore`` with a different device mesh re-shards via device_put
     (elastic restart: the data axis may grow/shrink between runs).
 """
@@ -16,11 +27,25 @@ import os
 import shutil
 import tempfile
 import threading
+import warnings
+import zlib
 
 import jax
 import numpy as np
 
+from repro import obs
+from repro.resilience import faults
+
 SEP = "::"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A snapshot exists on disk but fails integrity verification
+    (unreadable npz/manifest, or a per-array checksum mismatch)."""
+
+
+def _checksum(arr: np.ndarray) -> str:
+    return f"crc32:{zlib.crc32(np.ascontiguousarray(arr).tobytes()):08x}"
 
 
 def _flatten(tree):
@@ -36,6 +61,7 @@ def _flatten(tree):
 def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
     """Atomic checkpoint write; prunes old steps beyond ``keep``."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    faults.fire("ckpt.write", step=step)
     arrays = _flatten(tree)
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
@@ -44,7 +70,9 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3) -> str:
             json.dump({"step": step,
                        "keys": sorted(arrays),
                        "shapes": {k: list(v.shape) for k, v in arrays.items()},
-                       "dtypes": {k: str(v.dtype) for k, v in arrays.items()}},
+                       "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                       "checksums": {k: _checksum(v)
+                                     for k, v in arrays.items()}},
                       f)
         final = os.path.join(ckpt_dir, f"step_{step:010d}")
         if os.path.exists(final):
@@ -65,6 +93,12 @@ def _prune(ckpt_dir: str, keep: int):
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
     for d in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    # quarantined snapshots are kept for post-mortems but bounded the same
+    # way live steps are — only the newest ``keep`` survive
+    bad = sorted(d for d in os.listdir(ckpt_dir)
+                 if d.startswith("corrupt_step_"))
+    for d in bad[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def latest_step(ckpt_dir: str):
@@ -75,26 +109,55 @@ def latest_step(ckpt_dir: str):
         return None
 
 
-def restore(ckpt_dir: str, like, step: int | None = None, *,
-            aliases: dict | None = None, missing_ok=()):
-    """Restore into the structure of ``like`` (a pytree or abstract tree).
+def all_steps(ckpt_dir: str) -> list:
+    """Steps present on disk (not quarantined), ascending."""
+    try:
+        names = os.listdir(ckpt_dir)
+    except FileNotFoundError:
+        return []
+    out = []
+    for d in names:
+        if d.startswith("step_"):
+            try:
+                out.append(int(d[len("step_"):]))
+            except ValueError:
+                continue
+    return sorted(out)
 
-    ``aliases`` maps a current flattened key to the legacy on-disk key that
-    is read instead when the current key is absent (layout migrations, e.g.
-    ``{"cache::written_step": "cache::age"}``). Keys listed in ``missing_ok``
-    may be absent entirely; the corresponding ``like`` leaf (which must then
-    be concrete) is kept as-is — this lets a grown train state load
-    checkpoints written before the new fields existed.
 
-    Returns (step, tree). Raises FileNotFoundError when no checkpoint exists.
-    """
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+def _quarantine(ckpt_dir: str, step: int, reason: BaseException):
+    """Move a corrupt snapshot out of the restore path (never delete it —
+    a post-mortem may want the bytes)."""
+    src = os.path.join(ckpt_dir, f"step_{step:010d}")
+    dst = os.path.join(ckpt_dir, f"corrupt_step_{step:010d}")
+    warnings.warn(f"checkpoint step {step} is corrupt ({reason}); "
+                  f"quarantining to {dst}", stacklevel=3)
+    obs.counter("ckpt_corrupt_total").inc()
+    try:
+        if os.path.exists(dst):
+            shutil.rmtree(dst, ignore_errors=True)
+        os.rename(src, dst)
+    except OSError:
+        pass       # restore already skips it; quarantine is best-effort
+
+
+def _restore_step(ckpt_dir: str, step: int, like, aliases, missing_ok,
+                  verify: bool):
+    """Restore one specific step; integrity failures raise
+    ``CheckpointCorruptError``, structural mismatches with ``like``
+    (missing key, shape mismatch) raise KeyError/ValueError as before."""
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    data = np.load(os.path.join(path, "arrays.npz"))
-    aliases = aliases or {}
-    flat, tdef = jax.tree_util.tree_flatten_with_path(like)
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+    except FileNotFoundError:
+        raise
+    except Exception as e:           # truncated zip, bad json, IO error
+        raise CheckpointCorruptError(
+            f"checkpoint {path} is unreadable: {e!r}") from e
+    checksums = manifest.get("checksums") if verify else None
+    flat, _ = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, leaf in flat:
         key = SEP.join(
@@ -106,12 +169,62 @@ def restore(ckpt_dir: str, like, step: int | None = None, *,
                 leaves.append(leaf)
                 continue
             raise KeyError(f"checkpoint {path} has no array for {key}")
-        arr = data[disk_key]
+        try:
+            arr = data[disk_key]
+        except Exception as e:       # zip CRC failure mid-member, short read
+            raise CheckpointCorruptError(
+                f"checkpoint {path} array {disk_key!r} unreadable: "
+                f"{e!r}") from e
+        if checksums is not None:
+            # legacy manifests (pre-checksum) have no entry: accept as-is
+            want = checksums.get(disk_key)
+            if want is not None and _checksum(arr) != want:
+                raise CheckpointCorruptError(
+                    f"checkpoint {path} array {disk_key!r} fails its "
+                    f"checksum ({_checksum(arr)} != {want})")
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {leaf.shape}")
         leaves.append(arr.astype(leaf.dtype))
     return step, jax.tree.unflatten(jax.tree.structure(like), leaves)
+
+
+def restore(ckpt_dir: str, like, step: int | None = None, *,
+            aliases: dict | None = None, missing_ok=(), verify: bool = True):
+    """Restore into the structure of ``like`` (a pytree or abstract tree).
+
+    ``aliases`` maps a current flattened key to the legacy on-disk key that
+    is read instead when the current key is absent (layout migrations, e.g.
+    ``{"cache::written_step": "cache::age"}``). Keys listed in ``missing_ok``
+    may be absent entirely; the corresponding ``like`` leaf (which must then
+    be concrete) is kept as-is — this lets a grown train state load
+    checkpoints written before the new fields existed.
+
+    With ``step=None`` the newest step that passes checksum verification
+    wins: corrupt/truncated snapshots are quarantined and skipped, never
+    restored.  An explicit ``step=`` raises ``CheckpointCorruptError``
+    instead of falling back.  ``verify=False`` skips checksum checks (not
+    file-level readability checks).
+
+    Returns (step, tree). Raises FileNotFoundError when no (valid)
+    checkpoint exists.
+    """
+    aliases = aliases or {}
+    if step is not None:
+        return _restore_step(ckpt_dir, step, like, aliases, missing_ok,
+                             verify)
+    candidates = all_steps(ckpt_dir)
+    if not candidates:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    for s in reversed(candidates):
+        try:
+            return _restore_step(ckpt_dir, s, like, aliases, missing_ok,
+                                 verify)
+        except CheckpointCorruptError as e:
+            _quarantine(ckpt_dir, s, e)
+    raise FileNotFoundError(
+        f"no valid checkpoint in {ckpt_dir}: all {len(candidates)} "
+        f"snapshot(s) failed verification and were quarantined")
 
 
 def restore_sharded(ckpt_dir: str, like, shardings, step: int | None = None,
@@ -133,13 +246,21 @@ def restore_sharded(ckpt_dir: str, like, shardings, step: int | None = None,
 
 class AsyncCheckpointer:
     """Background-thread checkpoint writer: snapshot to host synchronously,
-    serialize to disk asynchronously. One in-flight write at a time."""
+    serialize to disk asynchronously. One in-flight write at a time.
+
+    A writer failure is never silent: it is counted
+    (``ckpt_write_failures_total``) and warned about on the worker thread
+    the moment it happens, and additionally re-raised from the next
+    ``wait()`` (or the implicit wait at the head of the next ``save``) so
+    the training loop — or ``fit_supervised`` above it — sees the real
+    exception type, not a vanished thread."""
 
     def __init__(self, ckpt_dir: str, *, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._thread: threading.Thread | None = None
         self.last_error: BaseException | None = None
+        self.failures = 0
 
     def save(self, step: int, tree):
         self.wait()
@@ -148,8 +269,12 @@ class AsyncCheckpointer:
         def work():
             try:
                 save(self.ckpt_dir, step, host_tree, keep=self.keep)
-            except BaseException as e:     # surfaced on next wait()
+            except BaseException as e:     # re-raised on next wait()
                 self.last_error = e
+                self.failures += 1
+                obs.counter("ckpt_write_failures_total").inc()
+                warnings.warn(f"async checkpoint write for step {step} "
+                              f"failed: {e!r}", stacklevel=2)
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()

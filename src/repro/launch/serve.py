@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import core, obs, serving
+from repro.resilience import FaultPlan, faults
 
 
 @dataclasses.dataclass
@@ -77,7 +78,7 @@ class Recommender:
     def __init__(self, cfg: core.SpeedyFeedConfig, params, store, *, k=10,
                  index_kind: str = "ivf-pq", nprobe: int = 8,
                  k_prime: int | None = None, compact_threshold: int = 512,
-                 probe_metric: str = "ip", mesh=None):
+                 probe_metric: str = "ip", mesh=None, service_kw=None):
         # probe_metric: the launcher serves raw MIPS over unnormalized
         # encoder embeddings — direction-concentrated, norm-heterogeneous —
         # where ranking cells by raw inner product recalls the large-norm
@@ -93,6 +94,9 @@ class Recommender:
         self.mesh = mesh
         self.k_prime = k_prime or max(4 * k, 32)
         self.compact_threshold = compact_threshold
+        # extra RetrievalService knobs (resilience: build_retries,
+        # degraded_after_failures, delta_hard_cap, ... — docs/resilience.md)
+        self.service_kw = dict(service_kw or {})
         self.service: serving.RetrievalService | None = None
         self._encode = jax.jit(
             lambda t, f: core.buslm_encode(params["plm"], cfg.plm, t, f))
@@ -139,7 +143,8 @@ class Recommender:
             seed=seed, devices=devices)
         self.service = serving.RetrievalService(
             builder, emb, k=self.k, k_prime=min(self.k_prime, n - 1),
-            compact_threshold=self.compact_threshold, auto_compact=False)
+            compact_threshold=self.compact_threshold, auto_compact=False,
+            **self.service_kw)
         self.service.store.attach_device_mirror()
         # bootstrap = the lifecycle itself: publish corpus (row 0 is the
         # pad news, never a candidate), one full build, one atomic swap
@@ -278,6 +283,13 @@ def main(argv=None):
                     help="publish fresh news and run a background full "
                          "rebuild + atomic swap in the middle of the "
                          "request loop")
+    ap.add_argument("--chaos-rebuild-failures", type=int, default=0,
+                    metavar="N",
+                    help="fault injection: make the first N mid-loop "
+                         "rebuild attempts fail (the bootstrap build is "
+                         "untouched); the service must retry through them, "
+                         "go degraded, and recover — implies "
+                         "--rebuild-mid-loop (docs/resilience.md)")
     ap.add_argument("--recall-threshold", type=float, default=0.7)
     ap.add_argument("--probe", type=int, default=16,
                     help="probe-subset size for the recall oracle")
@@ -320,12 +332,29 @@ def main(argv=None):
               f"trained {res.steps_done} steps before serving")
     else:
         params, _ = core.speedyfeed_state(cfg)
+    chaos_n = args.chaos_rebuild_failures
+    rebuild_mid_loop = args.rebuild_mid_loop or chaos_n > 0
+    service_kw = None
+    if chaos_n > 0:
+        # enough retries to outlast the injected failures, tight backoff,
+        # and a 1-failure degraded threshold so the degraded->healthy
+        # transition is guaranteed to appear in the metrics
+        service_kw = dict(build_retries=max(2, chaos_n),
+                          build_backoff_s=0.01,
+                          degraded_after_failures=1)
     rec = Recommender(cfg, params, store, k=args.k, index_kind=args.index,
                       nprobe=args.nprobe, k_prime=args.k_prime,
-                      probe_metric=args.probe_metric, mesh=mesh)
+                      probe_metric=args.probe_metric, mesh=mesh,
+                      service_kw=service_kw)
     t0 = time.time()
     rec.build_index()
     svc = rec.service
+    chaos_plan = None
+    if chaos_n > 0:
+        # armed only now: the bootstrap build above ran clean; the first
+        # N mid-loop rebuild attempts die instead and must be retried
+        chaos_plan = faults.arm(FaultPlan().fail(
+            "index.rebuild", calls=range(1, chaos_n + 1)))
     print(f"index built: {store.tokens.shape[0]} news "
           f"({args.index}, ntotal={svc.ntotal}, v{svc.version}) in "
           f"{time.time()-t0:.1f}s")
@@ -348,7 +377,7 @@ def main(argv=None):
               f"{len(best.trials)} configs tried)")
 
     on_batch = None
-    if args.rebuild_mid_loop:
+    if rebuild_mid_loop:
         n0 = svc.store.host.shape[0]
         rng = np.random.default_rng(1)
 
@@ -362,10 +391,17 @@ def main(argv=None):
             rec.publish(fresh_ids, fresh)        # O(append) on this path
             svc.rebuild(mode="full", block=False)  # absorb off-path
 
-    results, n_batches = micro_batch_loop(
-        rec, reqs, max_batch=args.batch, on_batch=on_batch)
-    if args.rebuild_mid_loop:
-        svc.wait_for_build()
+    try:
+        results, n_batches = micro_batch_loop(
+            rec, reqs, max_batch=args.batch, on_batch=on_batch)
+        if rebuild_mid_loop:
+            svc.wait_for_build()
+    finally:
+        faults.disarm()          # tests call main() in-process
+    if chaos_plan is not None:
+        print(f"chaos: {chaos_plan.fired('index.rebuild')} rebuild faults "
+              f"injected over {chaos_plan.calls('index.rebuild')} build "
+              f"attempts; health now {svc.health()['status']}")
     recall = measure_recall(rec, reqs, k=args.k, probe=args.probe)
     stats = ServeStats.from_registry(
         recall_at_k=recall, recall_ok=recall >= args.recall_threshold,

@@ -27,6 +27,7 @@ import argparse
 import numpy as np
 
 from repro import configs, core, data, obs, training
+from repro.resilience import FaultPlan, faults, fit_supervised
 from repro.training import TrainResult  # re-export (legacy import path)
 
 
@@ -60,10 +61,16 @@ def make_loader(cfg, *, n_news=2000, n_users=400, seed=0, buckets=None,
 def train_speedyfeed(*, steps: int, ckpt_dir: str | None = None,
                      ckpt_every: int = 50, seed: int = 0, cfg=None,
                      fail_at: int | None = None, log_every: int = 20,
-                     async_ckpt: bool = True,
-                     prefetch_depth: int = 2, mesh=None) -> TrainResult:
+                     async_ckpt: bool = True, prefetch_depth: int = 2,
+                     mesh=None, max_restarts: int = 0,
+                     backoff_s: float = 0.05) -> TrainResult:
     """The end-to-end driver. ``fail_at`` injects a crash (restart tests).
-    ``mesh`` runs the sharded Trainer path (see docs/sharding.md)."""
+    ``mesh`` runs the sharded Trainer path (see docs/sharding.md).
+
+    ``max_restarts > 0`` runs the loop under ``fit_supervised``: a
+    transient crash (injected fault, lost batch, non-finite-loss bailout)
+    restarts from the latest valid checkpoint with backoff, up to
+    ``max_restarts`` times (docs/resilience.md)."""
     cfg = cfg or small_speedyfeed_config()
     corpus, log, store, lcfg = make_loader(cfg, seed=seed)
     trainer = training.get_trainer("speedyfeed", cfg=cfg, mesh=mesh)
@@ -72,10 +79,15 @@ def train_speedyfeed(*, steps: int, ckpt_dir: str | None = None,
         return data.DynamicBatcher(log, store, lcfg, n_threads=2,
                                    seed=seed + 1_000_003 * epoch).start()
 
-    return trainer.fit(make_batcher, steps=steps, seed=seed,
-                       ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
-                       async_ckpt=async_ckpt, log_every=log_every,
-                       fail_at=fail_at, prefetch_depth=prefetch_depth)
+    fit_kw = dict(seed=seed, ckpt_every=ckpt_every, async_ckpt=async_ckpt,
+                  log_every=log_every, fail_at=fail_at,
+                  prefetch_depth=prefetch_depth)
+    if max_restarts > 0:
+        return fit_supervised(trainer, make_batcher, steps=steps,
+                              ckpt_dir=ckpt_dir, max_restarts=max_restarts,
+                              backoff_s=backoff_s, **fit_kw)
+    return trainer.fit(make_batcher, steps=steps, ckpt_dir=ckpt_dir,
+                       **fit_kw)
 
 
 def main():
@@ -94,6 +106,15 @@ def main():
                     help="train on an N-way data mesh (data=1 / omitted = "
                          "the exact single-device path); on CPU set "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    ap.add_argument("--max-restarts", type=int, default=0,
+                    help="supervise the run: restart from the latest valid "
+                         "checkpoint up to N times on transient failures "
+                         "(docs/resilience.md)")
+    ap.add_argument("--chaos-crash-at", type=int, default=None, metavar="STEP",
+                    help="fault injection: crash the step loop ONCE at STEP "
+                         "(fires through repro.resilience.faults, so the "
+                         "restarted attempt runs through); pair with "
+                         "--max-restarts to smoke-test auto-resume")
     args = ap.parse_args()
     from repro.launch.mesh import parse_mesh_arg
     mesh = parse_mesh_arg(args.mesh)
@@ -101,22 +122,29 @@ def main():
     if args.metrics_out:
         obs.configure_reporter(path=args.metrics_out,
                                every_s=args.metrics_every)
-    if args.arch == "speedyfeed":
-        res = train_speedyfeed(steps=args.steps, ckpt_dir=args.ckpt_dir,
-                               ckpt_every=args.ckpt_every, seed=args.seed,
-                               mesh=mesh)
-        loss = (f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}; "
-                if res.losses else "no new steps (already trained); ")
-        print(f"done: {res.steps_done} steps in {res.wall_seconds:.1f}s; "
-              + loss
-              + f"buckets {res.bucket_steps} compiles {res.compile_counts}; "
-              f"host stall {res.host_stall_fraction:.1%}"
-              + (f" (resumed from {res.resumed_from})" if res.resumed_from
-                 else ""))
-    else:
-        arch = configs.get_arch(args.arch)
-        print(f"running reduced-config smoke train for {args.arch}")
-        print(arch.smoke())
+    if args.chaos_crash_at is not None:
+        faults.arm(FaultPlan().fail("train.step", step=[args.chaos_crash_at]))
+    try:
+        if args.arch == "speedyfeed":
+            res = train_speedyfeed(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                                   ckpt_every=args.ckpt_every, seed=args.seed,
+                                   mesh=mesh, max_restarts=args.max_restarts)
+            loss = (f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}; "
+                    if res.losses else "no new steps (already trained); ")
+            print(f"done: {res.steps_done} steps in {res.wall_seconds:.1f}s; "
+                  + loss
+                  + f"buckets {res.bucket_steps} compiles "
+                  f"{res.compile_counts}; "
+                  f"host stall {res.host_stall_fraction:.1%}"
+                  + (f" (restarts {res.restarts})" if res.restarts else "")
+                  + (f" (resumed from {res.resumed_from})" if res.resumed_from
+                     else ""))
+        else:
+            arch = configs.get_arch(args.arch)
+            print(f"running reduced-config smoke train for {args.arch}")
+            print(arch.smoke())
+    finally:
+        faults.disarm()
     if args.metrics_out:
         obs.tick(force=True)
         print(f"metrics snapshot -> {args.metrics_out}")

@@ -1,0 +1,20 @@
+"""Resilience layer: fault injection, supervised restarts, degraded modes.
+
+Three legs (docs/resilience.md has the failure-mode table):
+
+* ``faults`` — a deterministic, seedable fault-injection registry.  Chaos
+  tests and the CI smokes arm a ``FaultPlan`` against named sites
+  (``ckpt.write``, ``index.rebuild``, ``prefetch.h2d``, ``train.step``);
+  unarmed, every site is a single ``None`` check.
+* ``fit_supervised`` — the restart supervisor around ``Trainer.fit``:
+  resume from the newest valid checkpoint on transient crashes, with
+  exponential backoff + jitter and a transient/fatal classifier.
+* degraded-mode serving lives in ``serving.service`` (health view, build
+  retry/backoff, delta backpressure) and checkpoint integrity in
+  ``checkpoint.ckpt`` (per-array checksums, corrupt-snapshot quarantine)
+  — this package holds what they share: the injection sites and the
+  supervisor that reacts to their failures.
+"""
+from . import faults
+from .faults import FaultPlan, FaultRule, InjectedFault, SITES
+from .supervise import NonFiniteLossError, default_classify, fit_supervised

@@ -6,12 +6,12 @@
 from .builder import IndexBuilder
 from .index import (PAD_ID, FlatIndex, IVFConfig, IVFFlatIndex, IVFPQIndex,
                     make_index)
-from .online import (DeltaBuffer, DeltaView, hybrid_search, ingest_from_cache,
-                     merge_topk_dedup)
+from .online import (DeltaBuffer, DeltaOverflowError, DeltaView, hybrid_search,
+                     ingest_from_cache, merge_topk_dedup)
 from .pq import (PQCodebook, PQConfig, fit_kmeans, kmeans, kmeans_minibatch,
                  opq_train, pq_decode, pq_encode, pq_lut, pq_search, pq_train,
                  sample_rows)
-from .service import RetrievalService, ServiceView
+from .service import BackpressureError, RetrievalService, ServiceView
 from .sharded import (ShardedIndexSnapshot, shard_mesh, shard_snapshot,
                       unshard_snapshot)
 from .snapshot import IndexSnapshot, empty_snapshot, snapshot_from_index

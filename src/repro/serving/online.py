@@ -33,6 +33,16 @@ from repro.core.cache import NEVER, CacheState
 from .index import PAD_ID, FlatIndex, _flat_score, _topk_padded
 
 
+class DeltaOverflowError(RuntimeError):
+    """An ``add`` would grow the delta tier past its ``max_size`` hard cap.
+
+    The cap exists for degraded-mode serving: when index rebuilds keep
+    failing, the delta must not grow unboundedly (its exact scan is on
+    every query's critical path) — the service surfaces this as
+    backpressure on ``publish`` while queries keep serving the last good
+    snapshot (see ``RetrievalService.health``)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class DeltaView:
     """Frozen view of the delta tier at one instant (ids + embeddings).
@@ -66,9 +76,11 @@ class DeltaBuffer:
     builder's job, off the request path.
     """
 
-    def __init__(self, dim: int, *, compact_threshold: int = 512):
+    def __init__(self, dim: int, *, compact_threshold: int = 512,
+                 max_size: int | None = None):
         self.dim = dim
         self.compact_threshold = compact_threshold
+        self.max_size = max_size       # hard cap; None = unbounded
         self._flat = FlatIndex(dim)
         self._seq = 0                  # bumps once per add() batch
         self._id_seq: dict[int, int] = {}
@@ -84,8 +96,23 @@ class DeltaBuffer:
     def emb(self):
         return self._flat._vecs
 
+    def would_overflow(self, ids) -> bool:
+        """Would upserting ``ids`` grow the buffer past ``max_size``?
+        (Re-published ids overwrite in place and never grow it.)"""
+        if self.max_size is None:
+            return False
+        fresh = sum(1 for i in np.unique(np.asarray(ids, np.int64))
+                    if int(i) not in self._id_seq)
+        return len(self) + fresh > self.max_size
+
     def add(self, ids, emb):
-        """Upsert fresh embeddings (re-published ids overwrite in place)."""
+        """Upsert fresh embeddings (re-published ids overwrite in place).
+        Raises ``DeltaOverflowError`` past the ``max_size`` hard cap."""
+        if self.would_overflow(ids):
+            raise DeltaOverflowError(
+                f"delta tier at hard cap ({len(self)}/{self.max_size}); "
+                f"a rebuild/compaction must absorb it before more "
+                f"publishes are accepted")
         self._seq += 1
         ids = np.asarray(ids, np.int64)
         self._flat.add(ids, emb)

@@ -30,6 +30,7 @@ jitted per-(kind, cap bucket) executables key off snapshot shapes.
 from __future__ import annotations
 
 import dataclasses
+import random
 import threading
 import time
 
@@ -38,11 +39,22 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.resilience import faults
 
 from .index import PAD_ID, _topk_padded
 from .online import DeltaBuffer, DeltaView, hybrid_search
 from .snapshot import IndexSnapshot
 from .store import EmbeddingStore
+
+
+class BackpressureError(RuntimeError):
+    """``publish`` refused: the delta tier is at its hard cap.
+
+    This is the degraded-mode contract's write side — when rebuilds keep
+    failing, the delta cannot grow unboundedly, so publishers must back
+    off (and retry after a successful rebuild/compaction absorbs the
+    buffer).  The read side is unaffected: queries keep serving the last
+    good snapshot + the capped delta."""
 
 
 @jax.jit
@@ -65,7 +77,11 @@ class RetrievalService:
 
     def __init__(self, builder, store_emb, *, k: int = 10,
                  k_prime: int | None = None, compact_threshold: int = 512,
-                 auto_compact: bool = True):
+                 auto_compact: bool = True, delta_hard_cap: int | None = None,
+                 build_retries: int = 2, build_backoff_s: float = 0.1,
+                 build_backoff_factor: float = 2.0,
+                 build_backoff_jitter: float = 0.25,
+                 degraded_after_failures: int = 2):
         """builder: IndexBuilder owning (kind, dim, quantizer configs).
         store_emb: [N_global, d] full-precision embeddings keyed by
         global news id (row 0 = pad news, never a candidate).
@@ -73,20 +89,42 @@ class RetrievalService:
         The service starts on the empty version-0 snapshot; bootstrap by
         publishing the corpus and calling ``rebuild(mode="full")``, or by
         swapping in a pre-built snapshot.
+
+        Degraded-mode knobs (docs/resilience.md): ``delta_hard_cap``
+        (default ``8 * compact_threshold``) bounds the delta tier —
+        beyond it ``publish`` raises ``BackpressureError`` while queries
+        keep serving; rebuild failures are retried ``build_retries``
+        times with exponential backoff (``build_backoff_s`` *
+        ``build_backoff_factor**attempt``, stretched by up to
+        ``build_backoff_jitter``), and ``degraded_after_failures``
+        consecutive failures flip the index component of ``health()`` to
+        degraded.
         """
         self.builder = builder
         self.store = EmbeddingStore(store_emb)
         self.k = k
         self.k_prime = k_prime or max(4 * k, 32)
         self.auto_compact = auto_compact
+        self.delta_hard_cap = (delta_hard_cap if delta_hard_cap is not None
+                               else 8 * compact_threshold)
         self.delta = DeltaBuffer(builder.dim,
-                                 compact_threshold=compact_threshold)
+                                 compact_threshold=compact_threshold,
+                                 max_size=self.delta_hard_cap)
+        self.build_retries = build_retries
+        self.build_backoff_s = build_backoff_s
+        self.build_backoff_factor = build_backoff_factor
+        self.build_backoff_jitter = build_backoff_jitter
+        self.degraded_after_failures = degraded_after_failures
         self.n_swaps = 0
         # _lock serializes WRITERS only (publish / swap / delta prune);
         # the query path reads self._view once and never locks
         self._lock = threading.Lock()
         self._build_lock = threading.Lock()    # one build in flight
         self._build_thread: threading.Thread | None = None
+        self._build_error: BaseException | None = None   # pending for wait_for_build
+        self._last_build_exc: BaseException | None = None  # shown by health()
+        self._build_failures = 0               # consecutive; reset on success
+        self._health_last: dict = {}
         self._view = ServiceView(builder.empty(), self.delta.view())
         # lifecycle telemetry: write-path counters are incremented in
         # place; the state gauges are computed-at-collect off the live
@@ -101,6 +139,16 @@ class RetrievalService:
         obs.gauge("index_staleness_s").set_fn(
             lambda: max(0.0, time.time() - self._view.snapshot.built_at)
             if self._view.snapshot.built_at else 0.0)
+        # health: 1.0 healthy / 0.0 degraded, computed-at-collect so the
+        # export is always current; transitions additionally count into
+        # health_transitions_total{component=,to=} as they happen
+        obs.gauge("health_status", component="index").set_fn(
+            lambda: float(self._index_ok()))
+        obs.gauge("health_status", component="delta").set_fn(
+            lambda: float(self._delta_ok()))
+        obs.gauge("health_status", component="service").set_fn(
+            lambda: float(self._index_ok() and self._delta_ok()))
+        self._note_health()                    # baseline, no transitions
 
     # ------------------------------------------------------------ reads
     def snapshot(self) -> IndexSnapshot:
@@ -130,17 +178,79 @@ class RetrievalService:
         """Host view of the full-precision store (alias of store.host)."""
         return self.store.host
 
+    # ----------------------------------------------------------- health
+    def _index_ok(self) -> bool:
+        return self._build_failures < self.degraded_after_failures
+
+    def _delta_ok(self) -> bool:
+        return len(self._view.delta) < self.delta_hard_cap
+
+    def _note_health(self):
+        """Record component health and count state *transitions* (the
+        degraded→healthy edge the chaos smoke asserts on survives in the
+        counter even when no metrics snapshot sampled the bad window)."""
+        index_ok, delta_ok = self._index_ok(), self._delta_ok()
+        cur = {"index": index_ok, "delta": delta_ok,
+               "service": index_ok and delta_ok}
+        for comp, ok in cur.items():
+            prev = self._health_last.get(comp)
+            if prev is not None and prev != ok:
+                obs.counter("health_transitions_total", component=comp,
+                            to="healthy" if ok else "degraded").inc()
+        self._health_last = cur
+
+    def health(self) -> dict:
+        """Structured health view of the serving tier.
+
+        Degraded-mode contract: 'degraded' NEVER means wrong or blocked
+        reads — queries always serve the last good snapshot + delta.  It
+        means the freshness machinery is behind: rebuilds keep failing
+        (index component) and/or the delta tier hit its hard cap so
+        ``publish`` is refusing writes (delta component)."""
+        view = self._view
+        delta_n = len(view.delta)
+        index_ok, delta_ok = self._index_ok(), delta_n < self.delta_hard_cap
+        err = self._last_build_exc
+        comps = {
+            "index": {"ok": index_ok,
+                      "consecutive_build_failures": self._build_failures,
+                      "degraded_after_failures": self.degraded_after_failures,
+                      "last_build_error": repr(err) if err else None},
+            "delta": {"ok": delta_ok, "size": delta_n,
+                      "hard_cap": self.delta_hard_cap},
+        }
+        ok = index_ok and delta_ok
+        return {"status": "healthy" if ok else "degraded", "ok": ok,
+                "components": comps,
+                "snapshot_version": view.snapshot.version,
+                "ntotal": view.snapshot.ntotal}
+
     # ----------------------------------------------------------- writes
     def publish(self, ids, emb):
         """Fresh news: grow-and-scatter the store, append to the delta
         tier.  O(append) — IVF assignment / PQ encode never run here;
         past the threshold a compaction is *scheduled* on a background
         thread instead (auto_compact=False leaves scheduling to the
-        caller's maintenance loop)."""
+        caller's maintenance loop).
+
+        Backpressure: when the delta tier is at ``delta_hard_cap`` (only
+        reachable when rebuilds keep failing — compaction normally drains
+        it at ``compact_threshold``) this raises ``BackpressureError``
+        *before* any mutation; the store is untouched and queries keep
+        serving.  Publishers should back off and retry after a rebuild."""
         with self._lock:       # serialize writers; queries never take this
+            if self.delta.would_overflow(ids):
+                obs.counter("publish_backpressure_total").inc()
+                self._note_health()
+                raise BackpressureError(
+                    f"delta tier at hard cap "
+                    f"({len(self._view.delta)}/{self.delta_hard_cap}); "
+                    f"rebuild/compaction must drain it first "
+                    f"(health: {self.health()['status']})")
             ids, emb = self.store.scatter(ids, emb)
             self.delta.add(ids, emb)
             self._view = ServiceView(self._view.snapshot, self.delta.view())
+            self._note_health()
         self._c_publish.inc()
         if self.auto_compact and self.delta.should_compact:
             self.rebuild(mode="compact", block=False)
@@ -160,9 +270,13 @@ class RetrievalService:
                 self.delta.prune(prune_upto)
             self._view = ServiceView(snapshot, self.delta.view())
             self.n_swaps += 1
+            # absorbing the delta may drop it back under the hard cap —
+            # this is the degraded→healthy edge for the delta component
+            self._note_health()
         self._c_swap.inc()
 
-    def rebuild(self, *, mode: str = "full", block: bool = True):
+    def rebuild(self, *, mode: str = "full", block: bool = True,
+                retries: int | None = None):
         """Produce a new snapshot off the request path and swap it in.
 
         mode="full": retrain quantizers from the store over every live id
@@ -173,19 +287,26 @@ class RetrievalService:
         block=False runs the build on a daemon thread and returns it (or
         None if a build is already in flight); the request loop keeps
         serving the old view until the finished snapshot is swapped in.
+        A background build failure is never silent: it is retried
+        ``retries`` times (default ``self.build_retries``) with backoff,
+        counted (``index_build_failures_total``), folded into ``health``,
+        and the final exception is re-raised from ``wait_for_build``.
         """
         if mode not in ("full", "compact"):
             raise ValueError(f"unknown rebuild mode: {mode!r}")
         if block:
             with self._build_lock:
-                return self._build_and_swap(mode)
+                return self._build_with_retries(mode, retries)
         if not self._build_lock.acquire(blocking=False):
             return None                        # a build is already running
 
         def _worker():
             try:
-                self._build_and_swap(mode)
+                self._build_with_retries(mode, retries)
+            except BaseException as e:   # surfaced via wait_for_build/health
+                self._build_error = e
             finally:
+                self._build_thread = None      # no dangling ref on failure
                 self._build_lock.release()
 
         t = threading.Thread(target=_worker, name="index-rebuild",
@@ -195,12 +316,51 @@ class RetrievalService:
         return t
 
     def wait_for_build(self):
-        """Join the most recent background rebuild, if any."""
+        """Join the most recent background rebuild, if any, and re-raise
+        the error that killed it (raise-once: a second call returns
+        cleanly; ``health()`` keeps reporting the failure)."""
         t = self._build_thread
         if t is not None:
             t.join()
+            self._build_thread = None
+        err = self._build_error
+        if err is not None:
+            self._build_error = None
+            raise err
+
+    def _build_with_retries(self, mode: str, retries: int | None):
+        """Run one build, retrying transient failures with backoff+jitter.
+        Callers hold ``_build_lock``.  Success resets the consecutive-
+        failure count (and the stashed error); exhaustion re-raises the
+        last failure after counting it into health."""
+        retries = self.build_retries if retries is None else retries
+        last: BaseException | None = None
+        for attempt in range(retries + 1):
+            if attempt:
+                delay = (self.build_backoff_s
+                         * self.build_backoff_factor ** (attempt - 1)
+                         * (1.0 + self.build_backoff_jitter
+                            * random.random()))
+                obs.counter("index_build_retries_total", mode=mode).inc()
+                time.sleep(delay)
+            try:
+                snap = self._build_and_swap(mode)
+            except Exception as e:
+                last = e
+                self._last_build_exc = e
+                self._build_failures += 1
+                obs.counter("index_build_failures_total", mode=mode).inc()
+                self._note_health()
+                continue
+            self._build_failures = 0
+            self._build_error = None
+            self._last_build_exc = None
+            self._note_health()
+            return snap
+        raise last
 
     def _build_and_swap(self, mode: str):
+        faults.fire("index.rebuild")
         with obs.span("index_rebuild", mode=mode):
             with self._lock:             # consistent (view, watermark) pair
                 view = self._view

@@ -19,9 +19,12 @@ import queue
 import threading
 import time
 
+import warnings
+
 import jax
 
 from repro import data, obs
+from repro.resilience import faults
 
 
 # producer finished cleanly (max_epochs reached, queue drained) — distinct
@@ -95,6 +98,7 @@ class DevicePrefetcher:
                 stats = item.pop("_stats", None)
                 bucket = int(item.pop("_bucket",
                                       (stats or {}).get("seg_len", 0)))
+                faults.fire("prefetch.h2d", step=epoch)
                 with obs.span("prefetch_h2d"):
                     if self._sharding is not None:
                         target = self._sharding(item) \
@@ -140,10 +144,24 @@ class DevicePrefetcher:
                 if time.monotonic() >= end:
                     return None
 
-    def stop(self):
+    def stop(self, timeout: float = 5.0):
         """Shut the producer down. Never raises (safe in ``finally``);
-        producer errors surface through ``get``."""
+        producer errors surface through ``get``.
+
+        A producer that does not join within ``timeout`` (wedged in a
+        device_put or a loader read) is abandoned as a daemon thread —
+        but never silently: the leak is counted
+        (``prefetch_thread_leaks_total``) and warned about, so a
+        supervisor restarting the trainer can see threads pile up
+        instead of debugging a mystery OOM."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=5.0)
+        t = self._thread
+        if t is not None:
+            t.join(timeout=timeout)
+            if t.is_alive():
+                obs.counter("prefetch_thread_leaks_total").inc()
+                warnings.warn(
+                    f"prefetch producer thread did not stop within "
+                    f"{timeout}s and was abandoned (daemon); it may hold "
+                    f"queue/device buffers until it dies", stacklevel=2)
             self._thread = None

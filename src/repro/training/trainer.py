@@ -21,10 +21,13 @@ import time
 import warnings
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt, obs
 from repro.distributed.straggler import StepTimeMonitor
+from repro.resilience import faults
+from repro.resilience.supervise import NonFiniteLossError
 
 from .prefetch import STREAM_END, DevicePrefetcher
 from .state import TrainState, restore_state, save_state
@@ -164,7 +167,11 @@ _CACHE_COUNTER_KEYS = (
 
 def _feed_cache_obs(host_metrics: list):
     """MetricsBuffer drain hook: fold the drained per-step cache scalars
-    into obs counters and refresh the derived hit-rate gauge."""
+    into obs counters and refresh the derived hit-rate gauge (plus the
+    non-finite-guard skip counter, which drains on the same cadence)."""
+    skipped = sum(float(m.get("nonfinite_step", 0.0)) for m in host_metrics)
+    if skipped:
+        obs.counter("train_nonfinite_steps_total").inc(skipped)
     for key, name in _CACHE_COUNTER_KEYS:
         total = sum(float(m[key]) for m in host_metrics if key in m)
         if total:
@@ -175,6 +182,21 @@ def _feed_cache_obs(host_metrics: list):
     looked = hits + misses + expired
     if looked:
         obs.gauge("cache_hit_rate").set(hits / looked)
+
+
+def _trailing_nonfinite(history: dict) -> int:
+    """Length of the trailing run of guard-skipped steps in the drained
+    ``nonfinite_step`` history (0 when the newest drained step was fine)."""
+    dq = history.get("nonfinite_step")
+    if not dq:
+        return 0
+    n = 0
+    for v in reversed(dq):
+        if v > 0:
+            n += 1
+        else:
+            break
+    return n
 
 
 @dataclasses.dataclass
@@ -190,6 +212,8 @@ class TrainResult:
     # final TrainState (device arrays) — lets a downstream launcher serve
     # the trained params without re-threading the Trainer instance
     state: object = None
+    # restarts consumed by resilience.fit_supervised (0 for a plain fit)
+    restarts: int = 0
 
 
 class Trainer:
@@ -203,11 +227,17 @@ class Trainer:
     """
 
     def __init__(self, cfg, *, make_step, init_fn, donate: bool = True,
-                 mesh=None, batch_specs_fn=None):
+                 mesh=None, batch_specs_fn=None, nonfinite_guard: bool = True):
         self.cfg = cfg
         self._raw_step = make_step(cfg)
         self._init_fn = init_fn
         self._donate = donate
+        # nonfinite_guard: when the raw step's loss comes back NaN/Inf the
+        # params / optimizer moments / cache keep their pre-step values (a
+        # jnp.where select inside the same executable — Adam is never fed a
+        # poisoned gradient), the step counter still advances past the bad
+        # batch, and the skip is reported as the ``nonfinite_step`` metric
+        self._nonfinite_guard = nonfinite_guard
         self.mesh = mesh
         # (mesh, batch_like) -> PartitionSpec tree; default is the generic
         # dim-0 data-parallel layout (distributed.sharding.batch_specs)
@@ -237,6 +267,18 @@ class Trainer:
         rng = jax.random.fold_in(state.rng, state.step)
         params, opt, cache, metrics = self._raw_step(
             state.params, state.opt, state.cache, state.step, rng, batch)
+        if self._nonfinite_guard and isinstance(metrics, dict) \
+                and "loss" in metrics:
+            ok = jnp.isfinite(metrics["loss"])
+
+            def keep(new, old):
+                return jnp.where(ok, new, old)
+
+            params = jax.tree.map(keep, params, state.params)
+            opt = jax.tree.map(keep, opt, state.opt)
+            cache = jax.tree.map(keep, cache, state.cache)
+            metrics = dict(metrics)
+            metrics["nonfinite_step"] = 1.0 - ok.astype(jnp.float32)
         new = TrainState(params, opt, cache, state.step + 1, state.rng)
         return new, metrics
 
@@ -319,13 +361,24 @@ class Trainer:
             async_ckpt: bool = True, log_every: int = 20,
             fail_at: int | None = None, prefetch_depth: int = 2,
             batch_timeout: float = 60.0, hosts: int | None = None,
-            microbatches_per_host: int = 1) -> TrainResult:
+            microbatches_per_host: int = 1,
+            max_consecutive_nonfinite: int = 8) -> TrainResult:
         """Train for ``steps`` total steps (resuming from the latest
-        checkpoint in ``ckpt_dir`` when one exists).
+        *valid* checkpoint in ``ckpt_dir`` when one exists — corrupt
+        snapshots are quarantined and skipped by ``checkpoint.restore``;
+        if every snapshot is corrupt, training starts from scratch with a
+        warning instead of crashing).
 
         ``make_batcher(epoch)`` -> started DynamicBatcher; epochs roll over
         inside the prefetcher. ``fail_at`` injects a crash after that many
-        total steps (restart tests).
+        total steps (restart tests); the ``train.step`` resilience fault
+        site fires each completed step for plan-driven chaos.
+
+        ``max_consecutive_nonfinite``: with the non-finite guard active,
+        a run of this many consecutive NaN/Inf-loss steps raises
+        ``NonFiniteLossError`` (checked at the metrics drain cadence, i.e.
+        every ``log_every`` steps) — ``fit_supervised`` classifies it as
+        transient and rolls back to the last checkpoint.  0 disables.
 
         ``hosts`` (default: ``jax.process_count()``) sets the straggler
         monitor's host count; with more than one (real processes, or
@@ -340,15 +393,21 @@ class Trainer:
         state = state if state is not None else self.init_state(seed)
         resumed = None
         if ckpt_dir and ckpt.latest_step(ckpt_dir) is not None:
-            if self.mesh is not None:
-                # restore leaves directly onto their mesh placement — a
-                # single-device checkpoint lands sharded, and vice versa
-                resumed, state = restore_state(
-                    ckpt_dir, state,
-                    shardings=self._ensure_state_shardings(state))
-            else:
-                resumed, state = restore_state(ckpt_dir, state)
-        elif self.mesh is not None:
+            try:
+                if self.mesh is not None:
+                    # restore leaves directly onto their mesh placement — a
+                    # single-device checkpoint lands sharded, and vice versa
+                    resumed, state = restore_state(
+                        ckpt_dir, state,
+                        shardings=self._ensure_state_shardings(state))
+                else:
+                    resumed, state = restore_state(ckpt_dir, state)
+            except FileNotFoundError as e:
+                # every snapshot failed verification (all quarantined by
+                # restore): degrade to a fresh start, don't die on resume
+                warnings.warn(f"resume skipped — {e}; training from "
+                              f"scratch", stacklevel=2)
+        if resumed is None and self.mesh is not None:
             state = self.place_state(state)
         step = int(state.step)
 
@@ -406,10 +465,20 @@ class Trainer:
                 obs.tick()
                 if fail_at is not None and step >= fail_at:
                     raise RuntimeError("injected failure")
+                faults.fire("train.step", step=step)
                 if ckpt_dir and step % ckpt_every == 0:
                     save_state(ckpt_dir, step, state, writer=writer)
                 if log_every and step % log_every == 0:
                     m = buf.drain()
+                    if max_consecutive_nonfinite:
+                        bad = _trailing_nonfinite(buf.history)
+                        if bad >= max_consecutive_nonfinite:
+                            raise NonFiniteLossError(
+                                f"{bad} consecutive non-finite losses at "
+                                f"step {step}: params held at their last "
+                                f"finite values by the guard; rolling back "
+                                f"to the last checkpoint",
+                                step=step, consecutive=bad)
                     now = time.perf_counter()
                     if monitor.n_hosts == 1:
                         # per-step dispatch time is meaningless on the

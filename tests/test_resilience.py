@@ -1,0 +1,403 @@
+"""Fault-injection, supervised auto-resume, and degraded-mode serving
+contracts (docs/resilience.md).
+
+Everything here rehearses a failure: plans fire deterministic faults at
+the instrumented sites, the supervisor restarts training from the last
+valid checkpoint, the non-finite guard keeps Adam unpoisoned, and the
+serving tier retries failed rebuilds / applies publish backpressure while
+queries keep serving the last good snapshot.
+"""
+import threading
+import time
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import data, obs, serving, training
+from repro.resilience import (FaultPlan, InjectedFault, NonFiniteLossError,
+                              default_classify, faults, fit_supervised)
+
+
+def counter_value(name, **labels):
+    return obs.counter(name, **labels).value
+
+
+# ---------------------------------------------------------------- FaultPlan
+
+def test_fire_is_noop_when_disarmed():
+    faults.disarm()
+    for site in faults.SITES:
+        faults.fire(site)                      # nothing armed: never raises
+    assert faults.active() is None
+
+
+def test_call_count_rule_fires_once_per_listed_call():
+    plan = FaultPlan().fail("ckpt.write", calls=2)
+    with faults.armed(plan):
+        faults.fire("ckpt.write")              # call 1: clean
+        with pytest.raises(InjectedFault):
+            faults.fire("ckpt.write")          # call 2: boom
+        faults.fire("ckpt.write")              # call 3: rule exhausted
+    assert plan.calls("ckpt.write") == 3
+    assert plan.fired("ckpt.write") == 1
+    assert faults.active() is None             # armed() always disarms
+
+
+def test_step_rule_fires_once_then_lets_resume_pass():
+    """A resumed fit re-reaching the crash step must run through: step
+    rules default to one fire per listed step."""
+    plan = FaultPlan().fail("train.step", step=10)
+    with faults.armed(plan):
+        faults.fire("train.step", step=9)
+        with pytest.raises(InjectedFault):
+            faults.fire("train.step", step=10)
+        faults.fire("train.step", step=10)     # the restarted attempt
+    assert plan.fired() == 1
+
+
+def test_probabilistic_rule_replays_with_seed():
+    def firing_pattern(seed):
+        plan = FaultPlan(seed=seed).fail("index.rebuild", p=0.3)
+        hits = []
+        with faults.armed(plan):
+            for i in range(64):
+                try:
+                    faults.fire("index.rebuild")
+                except InjectedFault:
+                    hits.append(i)
+        return hits
+    a, b = firing_pattern(7), firing_pattern(7)
+    assert a == b and len(a) > 0
+    assert firing_pattern(8) != a              # seed actually matters
+
+
+def test_custom_exception_and_injection_counter():
+    before = counter_value("faults_injected_total", site="prefetch.h2d")
+    plan = FaultPlan().fail("prefetch.h2d", calls=1, exc=OSError("disk gone"))
+    with faults.armed(plan):
+        with pytest.raises(OSError, match="disk gone"):
+            faults.fire("prefetch.h2d")
+    after = counter_value("faults_injected_total", site="prefetch.h2d")
+    assert after == before + 1
+
+
+# ------------------------------------------------------------ fit_supervised
+
+class StubTrainer:
+    """trainer.fit stand-in: raises the scripted exceptions, then returns
+    a TrainResult-shaped object."""
+
+    def __init__(self, failures):
+        self.failures = list(failures)
+        self.attempts = 0
+
+    def fit(self, make_batcher, *, steps, ckpt_dir=None, **kw):
+        self.attempts += 1
+        if self.failures:
+            raise self.failures.pop(0)
+        return types.SimpleNamespace(steps_done=steps, restarts=0)
+
+
+def test_supervisor_restarts_through_transient_failures():
+    tr = StubTrainer([InjectedFault("boom"), OSError("disk hiccup")])
+    naps = []
+    res = fit_supervised(tr, None, steps=10, ckpt_dir="unused",
+                         max_restarts=3, backoff_s=0.5, backoff_factor=2.0,
+                         sleep=naps.append)
+    assert tr.attempts == 3
+    assert res.steps_done == 10 and res.restarts == 2
+    assert len(naps) == 2 and naps[1] > naps[0]       # exponential backoff
+
+
+def test_supervisor_refuses_fatal_errors():
+    tr = StubTrainer([ValueError("bad config")])
+    with pytest.raises(ValueError):
+        fit_supervised(tr, None, steps=10, ckpt_dir="unused",
+                       max_restarts=5, sleep=lambda s: None)
+    assert tr.attempts == 1                    # never retried
+
+
+def test_supervisor_exhausts_restart_budget():
+    tr = StubTrainer([InjectedFault(f"crash {i}") for i in range(5)])
+    with pytest.raises(InjectedFault, match="crash 2"):
+        fit_supervised(tr, None, steps=10, ckpt_dir="unused",
+                       max_restarts=2, sleep=lambda s: None)
+    assert tr.attempts == 3                    # 1 try + 2 restarts
+
+
+def test_classifier_taxonomy():
+    assert default_classify(InjectedFault("x")) == "transient"
+    assert default_classify(NonFiniteLossError("x")) == "transient"
+    assert default_classify(OSError("x")) == "transient"
+    assert default_classify(ValueError("x")) == "fatal"
+    assert default_classify(KeyboardInterrupt()) == "fatal"
+
+
+# -------------------------------------------- non-finite guard in the step
+
+def _toy_trainer(**kw):
+    """1-param Trainer whose loss is driven entirely by the batch: x drives
+    the gradient and a ``bad`` flag poisons the loss with NaN."""
+    def make_step(cfg):
+        def step(params, opt, cache, step_no, rng, batch):
+            loss = jnp.mean(params["w"] * batch["x"])
+            loss = jnp.where(batch["bad"].any(), jnp.nan, loss)
+            new_p = {"w": params["w"] - 0.1 * jnp.mean(batch["x"])}
+            new_o = {"m": opt["m"] + 1.0}
+            return new_p, new_o, cache, {"loss": loss}
+        return step
+
+    def init_fn(cfg, key):
+        return training.TrainState({"w": jnp.float32(1.0)},
+                                   {"m": jnp.float32(0.0)}, {},
+                                   jnp.int32(0), key)
+
+    return training.Trainer(None, make_step=make_step, init_fn=init_fn,
+                            donate=False, **kw)
+
+
+def _toy_batch(bad=False, x=2.0):
+    return {"_bucket": 0,
+            "x": np.full((4,), x, np.float32),
+            "bad": np.array([bad])}
+
+
+def test_guard_holds_state_on_nonfinite_loss():
+    tr = _toy_trainer()
+    s0 = tr.init_state()
+    s1, m1 = tr.step(s0, _toy_batch(bad=False))
+    assert float(m1["nonfinite_step"]) == 0.0
+    assert float(s1.params["w"]) != float(s0.params["w"])   # normal update
+    s2, m2 = tr.step(s1, _toy_batch(bad=True))
+    assert float(m2["nonfinite_step"]) == 1.0
+    assert not np.isfinite(float(m2["loss"]))
+    # params AND optimizer state held at their pre-step values...
+    assert float(s2.params["w"]) == float(s1.params["w"])
+    assert float(s2.opt["m"]) == float(s1.opt["m"])
+    # ...but the step counter advances past the bad batch
+    assert int(s2.step) == int(s1.step) + 1
+
+
+def test_guard_identity_when_finite():
+    """With finite losses the guard is an exact identity — the select picks
+    the updated branch bit-for-bit (loss parity with guard off)."""
+    a, b = _toy_trainer(), _toy_trainer(nonfinite_guard=False)
+    sa, sb = a.init_state(), b.init_state()
+    for i in range(3):
+        sa, ma = a.step(sa, _toy_batch(x=float(i + 1)))
+        sb, mb = b.step(sb, _toy_batch(x=float(i + 1)))
+    np.testing.assert_array_equal(np.asarray(sa.params["w"]),
+                                  np.asarray(sb.params["w"]))
+    assert "nonfinite_step" not in mb
+
+
+class FakeBatcher:
+    """Pre-started DynamicBatcher stand-in feeding _toy_batch items."""
+
+    def __init__(self, items):
+        self._items = list(items)
+
+    def get(self, timeout=None):
+        if not self._items:
+            return data.EPOCH_END
+        return self._items.pop(0)
+
+    def stop(self):
+        pass
+
+
+def test_fit_raises_after_consecutive_nonfinite():
+    tr = _toy_trainer()
+    mk = lambda epoch: FakeBatcher([_toy_batch(bad=True) for _ in range(12)])
+    with pytest.raises(NonFiniteLossError) as ei:
+        tr.fit(mk, steps=12, log_every=2, max_consecutive_nonfinite=3)
+    assert ei.value.consecutive >= 3
+    # detection happens at the drain cadence (log_every), so the raise can
+    # land a little past the threshold but never a full epoch late
+    assert ei.value.step <= 6
+
+
+def test_fit_tolerates_isolated_nonfinite_steps():
+    bads = [False, True, False, True, False, False, False, False]
+    tr = _toy_trainer()
+    mk = lambda epoch: FakeBatcher([_toy_batch(bad=b) for b in bads])
+    res = tr.fit(mk, steps=len(bads), log_every=2,
+                 max_consecutive_nonfinite=3)
+    assert res.steps_done == len(bads)         # isolated NaNs: skip & go on
+
+
+# --------------------------------------------- end-to-end supervised train
+
+def test_supervised_train_rides_through_injected_crash(tmp_path):
+    """The chaos loop: crash at step 8 via the train.step site, restart
+    from the step-5 checkpoint, and still reach exactly the target."""
+    from repro.launch.train import train_speedyfeed
+    plan = FaultPlan().fail("train.step", step=8)
+    with faults.armed(plan):
+        res = train_speedyfeed(steps=12, ckpt_dir=str(tmp_path),
+                               ckpt_every=5, log_every=5,
+                               max_restarts=2, backoff_s=0.01)
+    assert plan.fired("train.step") == 1
+    assert res.restarts == 1
+    assert res.steps_done == 12
+    assert res.resumed_from == 5               # rolled back to the last ckpt
+    assert int(res.state.step) == 12
+
+
+# ------------------------------------------------- degraded-mode serving
+
+def _make_service(n=300, d=16, **kw):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    ids = np.arange(1, n + 1)
+    store = np.zeros((2 * n + 1, d), np.float32)
+    store[ids] = x
+    builder = serving.IndexBuilder("ivf-flat", d,
+                                   ivf=serving.IVFConfig(nlist=4, nprobe=4))
+    kw.setdefault("build_backoff_s", 0.001)
+    svc = serving.RetrievalService(builder, store, k=5, k_prime=32, **kw)
+    svc.swap(builder.build(ids, x))
+    return svc, x, ids, rng
+
+
+def test_rebuild_retries_through_transient_failures():
+    svc, x, ids, rng = _make_service(build_retries=2)
+    f0 = counter_value("index_build_failures_total", mode="full")
+    r0 = counter_value("index_build_retries_total", mode="full")
+    v0 = svc.version
+    with faults.armed(FaultPlan().fail("index.rebuild", calls=1)):
+        snap = svc.rebuild(mode="full", block=True)
+    assert snap is not None and svc.version > v0
+    assert counter_value("index_build_failures_total", mode="full") == f0 + 1
+    assert counter_value("index_build_retries_total", mode="full") == r0 + 1
+    assert svc.health()["status"] == "healthy"   # success reset the streak
+
+
+def test_background_rebuild_failure_is_never_silent():
+    svc, x, ids, rng = _make_service(build_retries=0,
+                                     degraded_after_failures=2)
+    t0 = counter_value("health_transitions_total", component="index",
+                       to="degraded")
+    # two exhausted background builds -> degraded index component
+    for _ in range(2):
+        with faults.armed(FaultPlan().fail("index.rebuild", calls=1)):
+            t = svc.rebuild(mode="full", block=False)
+            assert t is not None
+            with pytest.raises(InjectedFault):
+                svc.wait_for_build()
+    assert not svc.build_in_flight             # no dangling thread/lock
+    assert svc._build_thread is None
+    h = svc.health()
+    assert h["status"] == "degraded" and not h["components"]["index"]["ok"]
+    assert h["components"]["index"]["consecutive_build_failures"] == 2
+    assert "InjectedFault" in h["components"]["index"]["last_build_error"]
+    assert counter_value("health_transitions_total", component="index",
+                         to="degraded") == t0 + 1
+    # wait_for_build is raise-once: the error was delivered above
+    svc.wait_for_build()
+    # queries keep serving the last good snapshot while degraded
+    q = rng.normal(size=(3, x.shape[1])).astype(np.float32)
+    _, got = svc.query(q)
+    assert (got != serving.PAD_ID).all()
+    # recovery: a clean rebuild flips the index component back to healthy
+    svc.rebuild(mode="full", block=True)
+    assert svc.health()["status"] == "healthy"
+    assert counter_value("health_transitions_total", component="index",
+                         to="healthy") >= 1
+
+
+def test_publish_backpressure_at_delta_hard_cap():
+    svc, x, ids, rng = _make_service(compact_threshold=1000,
+                                     auto_compact=False, delta_hard_cap=8)
+    n = x.shape[0]
+    d = x.shape[1]
+    fresh = rng.normal(size=(8, d)).astype(np.float32)
+    svc.publish(np.arange(n + 1, n + 9), fresh)          # exactly at cap
+    assert svc.n_pending == 8
+    assert svc.health()["status"] == "degraded"          # cap reached
+    b0 = counter_value("publish_backpressure_total")
+    with pytest.raises(serving.BackpressureError):
+        svc.publish(np.array([n + 9]), fresh[:1])
+    assert counter_value("publish_backpressure_total") == b0 + 1
+    # the refusal had no side effects: store row untouched, delta unchanged
+    assert svc.n_pending == 8
+    assert not svc.store.host[n + 9].any()
+    # re-publishing an id already in the delta is an in-place upsert, never
+    # growth — still accepted at the cap
+    svc.publish(np.array([n + 1]), fresh[:1] + 1.0)
+    assert svc.n_pending == 8
+    # reads never degrade: the capped delta + snapshot still serve
+    q = rng.normal(size=(2, d)).astype(np.float32)
+    _, got = svc.query(q)
+    assert (got != serving.PAD_ID).all()
+    # a successful rebuild absorbs the delta -> backpressure lifts
+    svc.rebuild(mode="full", block=True)
+    assert svc.n_pending == 0
+    assert svc.health()["status"] == "healthy"
+    svc.publish(np.array([n + 9]), fresh[:1])            # accepted again
+    assert svc.n_pending == 1
+
+
+def test_delta_overflow_guard_is_upsert_aware():
+    buf = serving.DeltaBuffer(4, max_size=2)
+    buf.add([1, 2], np.ones((2, 4), np.float32))
+    assert buf.would_overflow([3]) and not buf.would_overflow([1, 2])
+    with pytest.raises(serving.DeltaOverflowError):
+        buf.add([3], np.ones((1, 4), np.float32))
+    buf.add([2], np.zeros((1, 4), np.float32))           # upsert: fine
+    assert len(buf) == 2
+
+
+# ------------------------------------------------------- prefetch satellite
+
+class WedgedBatcher:
+    """Producer stuck in a long device read: get() ignores the stop flag."""
+
+    def __init__(self):
+        self.stopped = threading.Event()
+
+    def get(self, timeout=None):
+        time.sleep(30.0)
+        return data.EPOCH_END
+
+    def stop(self):
+        self.stopped.set()
+
+
+def test_prefetch_fault_site_preserves_exception_type():
+    """A fault at prefetch.h2d must surface from get() with its original
+    type (the supervisor's transient/fatal classification depends on it)."""
+    from repro.training.prefetch import DevicePrefetcher
+    plan = FaultPlan().fail("prefetch.h2d", calls=1, exc=OSError("h2d died"))
+    with faults.armed(plan):
+        p = DevicePrefetcher(lambda e: FakeBatcher([_toy_batch()]),
+                             max_epochs=1).start()
+        try:
+            with pytest.raises(OSError, match="h2d died"):
+                p.get(timeout=10.0)
+        finally:
+            p.stop()
+
+
+def test_prefetch_stop_counts_abandoned_thread():
+    from repro.training.prefetch import DevicePrefetcher
+    leaks0 = counter_value("prefetch_thread_leaks_total")
+    p = DevicePrefetcher(lambda e: WedgedBatcher(), max_epochs=1).start()
+    time.sleep(0.05)                           # let the producer wedge
+    with pytest.warns(UserWarning, match="did not stop"):
+        p.stop(timeout=0.1)
+    assert counter_value("prefetch_thread_leaks_total") == leaks0 + 1
+    assert p._thread is None                   # ref dropped either way
+
+
+def test_prefetch_stop_clean_join_is_silent():
+    from repro.training.prefetch import DevicePrefetcher
+    leaks0 = counter_value("prefetch_thread_leaks_total")
+    p = DevicePrefetcher(lambda e: FakeBatcher([_toy_batch()]),
+                         max_epochs=1).start()
+    assert p.get(timeout=10.0) is not None
+    p.stop()
+    assert counter_value("prefetch_thread_leaks_total") == leaks0
