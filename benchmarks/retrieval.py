@@ -42,6 +42,7 @@ import numpy as np
 
 from repro import obs, serving
 from repro.serving import index as serving_index
+from repro.serving import loadgen
 
 
 def make_vectors(n, d=64, rank=16, seed=0):
@@ -301,6 +302,78 @@ def bench_lifecycle(x, q, *, k=10, swap_iters=200, query_reps=60,
             "final_version": svc.version}
 
 
+def bench_load_sweep(x, q, *, k=10, qps_points=(100.0, 200.0, 400.0),
+                     duration_s=2.0, slo_ms=50.0, max_batch=32):
+    """Open-loop Poisson load sweep against the raw service query path
+    (no encoder): ivf-pq two-stage retrieve behind the continuous-
+    batching ``RequestScheduler`` (docs/serving_scheduler.md).
+
+    Complements the launcher's ``--open-loop`` (source="serve", full
+    pipeline with user encode) with ``source="benchmark"`` entries that
+    isolate index + scheduler behavior at corpus scale.  Scenarios:
+    quiescent, and during_rebuild with a publish + full-rebuild churn
+    loop holding builds in flight — the during-rebuild shapes (hybrid
+    over-fetch width with a non-empty delta, the rebuild's train/encode
+    shapes) are warmed OUTSIDE the measured window, same methodology as
+    ``bench_lifecycle``."""
+    d, n = x.shape[1], x.shape[0]
+    ids = np.arange(1, n + 1)
+    builder = _builder_for("ivf-pq", d, n)
+    store = np.zeros((n + 1, d), np.float32)
+    store[ids] = x
+    svc = serving.RetrievalService(builder, store, k=k, k_prime=10 * k,
+                                   compact_threshold=10 ** 9,
+                                   auto_compact=False)
+    svc.swap(builder.build(ids, x))
+
+    def execute(payloads, pad_to):
+        qb = np.zeros((pad_to, d), np.float32)
+        for i, p in enumerate(payloads):
+            qb[i] = p
+        _, got = svc.query(qb, k)
+        return [got[i] for i in range(len(payloads))]
+
+    sched = serving.RequestScheduler(execute, max_batch=max_batch,
+                                     max_wait_ms=1.0, max_queue=1024,
+                                     slo_ms=slo_ms)
+    sched.attach_to(svc)
+    payloads = [q[i % q.shape[0]] for i in range(64)]
+    rng = np.random.default_rng(5)
+    fresh_ids = np.arange(n + 1, n + 17)
+    extra = {"index": "ivf-pq", "n": n}
+    try:
+        sched.warmup(payloads[0])
+        # warm cycle: one publish + bucket re-warm (delta non-empty) +
+        # one full rebuild, all outside the measured windows
+        svc.publish(fresh_ids, rng.normal(size=(16, d)).astype(np.float32))
+        sched.warmup(payloads[0])
+        svc.rebuild(mode="full", block=True)
+        entries = [loadgen.sweep(
+            sched, payloads, list(qps_points), duration_s=duration_s,
+            slo_ms=slo_ms, seed=11, scenario="quiescent",
+            source="benchmark", extra=extra)]
+        stop = threading.Event()
+
+        def churn():       # re-publish the SAME id block: warm shapes only
+            while not stop.is_set():
+                svc.publish(fresh_ids,
+                            rng.normal(size=(16, d)).astype(np.float32))
+                svc.rebuild(mode="full", block=True)
+
+        t = threading.Thread(target=churn, daemon=True)
+        t.start()
+        mid = list(qps_points)[len(qps_points) // 2]
+        entries.append(loadgen.sweep(
+            sched, payloads, [mid], duration_s=duration_s, slo_ms=slo_ms,
+            seed=23, scenario="during_rebuild", source="benchmark",
+            extra=extra))
+        stop.set()
+        t.join(timeout=120.0)
+    finally:
+        sched.stop(drain=True)
+    return entries
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+",
@@ -328,6 +401,21 @@ def main(argv=None):
     ap.add_argument("--mesh-merge", action="store_true",
                     help="merge the --mesh entries into the existing --out "
                          "JSON instead of re-running every section")
+    ap.add_argument("--load-sweep", action="store_true",
+                    help="open-loop Poisson load sweep through the request "
+                         "scheduler against the raw ivf-pq query path "
+                         "(quiescent + during_rebuild scenarios), merged "
+                         "into --out by (kind, source, scenario) without "
+                         "re-running the other sections")
+    ap.add_argument("--load-n", type=int, default=8000,
+                    help="corpus size for --load-sweep")
+    ap.add_argument("--load-qps", type=float, nargs="+",
+                    default=[100.0, 200.0, 400.0], metavar="QPS",
+                    help="offered-QPS points for --load-sweep")
+    ap.add_argument("--load-duration", type=float, default=2.0,
+                    help="seconds of offered load per --load-sweep point")
+    ap.add_argument("--load-slo-ms", type=float, default=50.0,
+                    help="per-request SLO deadline for --load-sweep")
     ap.add_argument("--out", default=None,
                     help="output path (default: BENCH_retrieval.json next "
                          "to this file)")
@@ -358,6 +446,28 @@ def main(argv=None):
                       + ("" if parity is None
                          else f" topk==unsharded: {parity}"))
         return out
+
+    if args.load_sweep:
+        # merge-style section (like --mesh-merge): record the scheduler
+        # load-sweep entries without re-running the expensive sections
+        out_p = pathlib.Path(args.out) if args.out else (
+            pathlib.Path(__file__).parent / "BENCH_retrieval.json")
+        obs.reset()
+        x = make_vectors(args.load_n)
+        q = make_vectors(256, seed=7)
+        entries = bench_load_sweep(
+            x, q, k=args.k, qps_points=args.load_qps,
+            duration_s=args.load_duration, slo_ms=args.load_slo_ms,
+            max_batch=args.batch)
+        for e in entries:
+            for pt in e["points"]:
+                print(f"[{e['scenario']:>14}] offered {pt['offered_qps']:>6} "
+                      f"qps: goodput {pt['goodput_qps']:>6} qps, e2e p50/p99 "
+                      f"{pt['e2e_ms_p50']}/{pt['e2e_ms_p99']}ms, rejected "
+                      f"{pt['rejected']}, late {pt['late_dropped']}")
+        loadgen.record_sweep(entries, out_p)
+        print(f"merged {len(entries)} load-sweep entries into {out_p}")
+        return entries
 
     if args.mesh_merge:
         # record the mesh scaling entries into an EXISTING result file

@@ -8,30 +8,45 @@ snapshot lifecycle):
      by atomic swap; full-precision embeddings stay in the service's
      ``EmbeddingStore`` (host + device mirror) for user encoding and
      re-rank,
-  2. online: micro-batched request loop — collect up to ``max_batch``
-     requests or ``max_wait_ms``, encode users (history -> user
-     embedding), then two-stage retrieve: ANN recall of k' candidates
-     (one frozen snapshot + fresh-news delta view) followed by exact
-     re-rank to top-k.  Fresh news enters via ``service.publish`` (pure
-     delta append) and is absorbed by background rebuilds that swap in
-     mid-loop without blocking a query (--rebuild-mid-loop exercises
-     exactly that).  Per-request latency includes time spent queued.
+  2. online: every request goes through the continuous-batching
+     ``serving.RequestScheduler`` (bounded admission queue, pow2
+     shape-bucketed batches over the warm executables, ``max_wait_ms``
+     timeout flush, optional SLO deadlines — docs/serving_scheduler.md):
+     encode users (history -> user embedding), then two-stage retrieve:
+     ANN recall of k' candidates (one frozen snapshot + fresh-news delta
+     view) followed by exact re-rank to top-k.  Fresh news enters via
+     ``service.publish`` (pure delta append) and is absorbed by
+     background rebuilds that swap in mid-loop without blocking a query
+     (--rebuild-mid-loop exercises exactly that).
+
+Two drivers feed the scheduler:
+  closed-loop   ``micro_batch_loop`` submits a fixed request list and
+                drains it — the CI smokes' deterministic path,
+  open-loop     ``--open-loop`` fires seeded Poisson arrivals at ≥3
+                offered-QPS points (``--sweep``/``--qps``), measures
+                p50/p99 queued/e2e latency, goodput under ``--slo-ms``,
+                reject rate, and batch occupancy, and merges the sweep
+                into BENCH_retrieval.json (``--bench-out``).
 
 All request-loop numbers flow through the process-wide ``repro.obs``
-registry (``query_latency_ms{phase=queued|e2e}``, ``serve_batch_size``,
-``serve_requests_total``, ...); ``ServeStats`` is a *view* rendered from
-that registry after the loop, and ``--metrics-out`` snapshots the whole
-registry (train + publish + serve, one process = one registry) to JSONL.
+registry (``query_latency_ms{phase=queued|execute|e2e}``,
+``serve_batch_size``, ``sched_*``, ...); ``ServeStats`` is a *view*
+rendered from that registry after the loop, and ``--metrics-out``
+snapshots the whole registry (train + publish + serve, one process =
+one registry) to JSONL.
 
 Run: python -m repro.launch.serve --requests 64 --batch 16 \
          [--index ivf-pq|ivf-flat|exact] [--nprobe 8] [--k-prime 64] \
          [--rebuild-mid-loop] [--train-steps 6] [--metrics-out m.jsonl]
+     python -m repro.launch.serve --open-loop --sweep 50 100 200 \
+         --slo-ms 250 [--duration 2.0] [--bench-out BENCH.json]
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import queue
+import pathlib
+import threading
 import time
 
 import jax
@@ -54,6 +69,9 @@ class ServeStats:
     ntotal: int = 0
     index_version: int = 0
     n_swaps: int = 0
+    # --open-loop only: the BENCH-ready load-sweep entries (per-QPS-point
+    # goodput / p50 / p99 / reject-rate records)
+    load_sweep: list | None = None
 
     @classmethod
     def from_registry(cls, *, recall_at_k: float, recall_ok: bool,
@@ -97,6 +115,12 @@ class Recommender:
         # extra RetrievalService knobs (resilience: build_retries,
         # degraded_after_failures, delta_hard_cap, ... — docs/resilience.md)
         self.service_kw = dict(service_kw or {})
+        # chunked store growth: user encoding is jitted against the
+        # device mirror's [N, d] shape, so exact growth recompiled it on
+        # the request path for every small publish (open-loop churn
+        # measured ~1.4 s/publish); one chunk = one recompile per 1024
+        # fresh rows instead
+        self.service_kw.setdefault("store_grow_chunk", 1024)
         self.service: serving.RetrievalService | None = None
         self._encode = jax.jit(
             lambda t, f: core.buslm_encode(params["plm"], cfg.plm, t, f))
@@ -170,65 +194,148 @@ class Recommender:
         return self.service.query(user, self.k)
 
 
-def micro_batch_loop(rec: Recommender, requests, *, max_batch: int,
-                     max_wait_ms: float = 2.0, on_batch=None):
-    """Batched request loop; returns (results, n_batches).
-
-    Each request's latency is measured from the moment it entered the
-    queue to batch completion, so queueing delay (waiting for earlier
-    batches) is part of the number — not one shared batch wall-clock.
-    All timing lands in the obs registry (the old per-request latency
-    list is gone): ``query_latency_ms{phase="queued"}`` (enqueue ->
-    dequeued into a batch), ``{phase="e2e"}`` (enqueue -> batch done),
-    the ``serve_batch_size`` distribution, and request/batch counters.
-    ``on_batch(i)`` fires after batch i completes (the rebuild-mid-loop
-    smoke publishes fresh news + kicks a background rebuild from it).
-    """
-    q = queue.Queue()
-    for r in requests:
-        q.put((time.time(), r))
-    results = []
-    n_batches = 0
+def make_recommend_execute(rec: Recommender):
+    """The scheduler's model-side callable: pad ``len(payloads)``
+    histories up to the static batch dim ``pad_to`` (one of the
+    scheduler's pow2 shape buckets — NOT ``max_batch``, so a partial
+    batch lands in the smallest warm executable instead of encoding
+    ``max_batch - n`` junk rows at the full shape) and run the two-stage
+    pipeline.  Returns one top-k id row per payload, in order."""
     L = rec.cfg.hist_len
-    h_queued = obs.histogram("query_latency_ms", phase="queued")
-    h_e2e = obs.histogram("query_latency_ms", phase="e2e")
-    h_bsz = obs.histogram("serve_batch_size")
-    c_req = obs.counter("serve_requests_total")
-    c_batch = obs.counter("serve_batches_total")
-    while not q.empty():
-        batch, t_enq = [], []
-        deadline = time.time() + max_wait_ms / 1e3
-        while len(batch) < max_batch and (time.time() < deadline
-                                          or not batch):
-            try:
-                t0, r = q.get_nowait()
-            except queue.Empty:
-                break
-            batch.append(r)
-            t_enq.append(t0)
-        t_deq = time.time()
-        for t0 in t_enq:
-            h_queued.observe((t_deq - t0) * 1e3)
-        hist = np.zeros((max_batch, L), np.int32)
-        mask = np.zeros((max_batch, L), bool)
-        for i, h in enumerate(batch):
-            h = h[-L:]
+
+    def execute(payloads, pad_to):
+        hist = np.zeros((pad_to, L), np.int32)
+        mask = np.zeros((pad_to, L), bool)
+        for i, h in enumerate(payloads):
+            h = np.asarray(h)[-L:]
             hist[i, :len(h)] = h
             mask[i, :len(h)] = True
-        with obs.span("serve_batch"):
-            _, ids = rec.recommend(hist, mask)
-        t_done = time.time()
-        for t0 in t_enq:
-            h_e2e.observe((t_done - t0) * 1e3)
-        results.extend(ids[:len(batch)])
-        n_batches += 1
-        h_bsz.observe(len(batch))
-        c_req.inc(len(batch))
-        c_batch.inc()
-        obs.tick()
-        if on_batch is not None:
-            on_batch(n_batches)
-    return results, n_batches
+        _, ids = rec.recommend(hist, mask)
+        return [ids[i] for i in range(len(payloads))]
+
+    return execute
+
+
+def micro_batch_loop(rec: Recommender, requests, *, max_batch: int,
+                     max_wait_ms: float = 2.0, on_batch=None):
+    """Closed-loop driver over the continuous-batching scheduler;
+    returns (results, n_batches).
+
+    Thin by design: submit the fixed request list, wait for every
+    handle, drain.  Batching, shape bucketing, timeout flush, and all
+    request-loop telemetry (``query_latency_ms{phase=queued|execute|
+    e2e}``, ``serve_batch_size``, request/batch counters) live in
+    ``serving.RequestScheduler`` — this path and the open-loop Poisson
+    harness measure the same machinery.  ``on_batch(i)`` fires on the
+    scheduler worker after batch i completes (the rebuild-mid-loop
+    smoke publishes fresh news + kicks a background rebuild from it).
+    """
+    sched = serving.RequestScheduler(
+        make_recommend_execute(rec), max_batch=max_batch,
+        max_wait_ms=max_wait_ms, max_queue=max(len(requests), 1),
+        on_batch=on_batch)
+    try:
+        handles = [sched.submit(h) for h in requests]
+        results = [h.result(timeout=300.0) for h in handles]
+    finally:
+        sched.stop(drain=True)
+    return results, sched.n_batches
+
+
+def open_loop_harness(args, rec: Recommender, requests, *, chaos_n: int = 0):
+    """Open-loop Poisson load sweep through the continuous-batching
+    scheduler (docs/serving_scheduler.md).
+
+    Sweeps the offered-QPS points (``--sweep`` / ``--qps``; default 3
+    points) against one warmed scheduler under ``--slo-ms`` deadlines,
+    recording p50/p99 queued/e2e latency, goodput-under-SLO, reject
+    rate, and late-drops per point.  With --rebuild-mid-loop (or chaos),
+    one extra point runs at the middle offered rate while a publisher +
+    full-rebuild churn loop holds a build in flight — PR 5's
+    rebuild-mid-loop p99 as one scenario of this harness.  The churn
+    re-publishes fresh embeddings for the SAME id block (re-encoded
+    news, the paper's model-drift loop), and one publish→rebuild cycle
+    runs before the measured window with the bucket warmup repeated
+    while the delta tier is non-empty — the hybrid over-fetch width
+    (k' + |delta|, pow2) and the rebuild's train/encode shapes are
+    static jit keys, so without the warm cycle the window would measure
+    a compile storm, not rebuild contention.  ``chaos_n > 0`` arms the
+    fault plan AFTER the warm cycle, so the injected rebuild failures
+    land inside the measured window.  Returns (entries, chaos_plan)."""
+    svc = rec.service
+    qps_points = [float(q) for q in (
+        args.sweep if args.sweep
+        else ([args.qps] if args.qps else [50.0, 100.0, 200.0]))]
+    sched = serving.RequestScheduler(
+        make_recommend_execute(rec), max_batch=args.batch,
+        max_wait_ms=args.max_wait_ms, max_queue=args.queue_depth,
+        slo_ms=args.slo_ms)
+    sched.attach_to(svc)          # saturated admission queue => degraded
+    n_warm = sched.warmup(requests[0])
+    print(f"scheduler warm: {n_warm} shape buckets {sched.buckets}, "
+          f"slo={args.slo_ms}ms, queue cap {args.queue_depth}")
+    extra = {"index": args.index, "ntotal": svc.ntotal}
+    chaos_plan = None
+    rebuild_scenario = args.rebuild_mid_loop or chaos_n > 0
+    rng = np.random.default_rng(1)
+    n0 = svc.store.host.shape[0]
+    fresh_ids = np.arange(n0, n0 + 32)
+
+    def fresh_rows():
+        return (svc.store.host[1:33]
+                + 0.01 * rng.normal(size=(32, svc.store.dim))
+                ).astype(np.float32)
+
+    try:
+        if rebuild_scenario:
+            # warm cycle (outside every measured window)
+            rec.publish(fresh_ids, fresh_rows())     # O(append)
+            sched.warmup(requests[0])                # delta non-empty path
+            svc.rebuild(mode="full", block=True)
+            if chaos_n > 0:
+                chaos_plan = faults.arm(FaultPlan().fail(
+                    "index.rebuild", calls=range(1, chaos_n + 1)))
+        entries = [serving.loadgen.sweep(
+            sched, requests, qps_points, duration_s=args.duration,
+            slo_ms=args.slo_ms, seed=11, scenario="quiescent",
+            source="serve", extra=extra)]
+        if rebuild_scenario:
+            stop_ev = threading.Event()
+
+            def churn():
+                while not stop_ev.is_set():
+                    try:
+                        rec.publish(fresh_ids, fresh_rows())
+                        svc.rebuild(mode="full", block=True)
+                    except Exception:
+                        # retries exhausted under chaos: the view stays
+                        # on the last good snapshot; keep churning
+                        pass
+
+            churn_t = threading.Thread(target=churn, name="rebuild-churn",
+                                       daemon=True)
+            churn_t.start()
+            mid = qps_points[len(qps_points) // 2]
+            entries.append(serving.loadgen.sweep(
+                sched, requests, [mid], duration_s=args.duration,
+                slo_ms=args.slo_ms, seed=23, scenario="during_rebuild",
+                source="serve", extra=extra))
+            stop_ev.set()
+            churn_t.join(timeout=120.0)
+    finally:
+        sched.stop(drain=True)
+    for e in entries:
+        for pt in e["points"]:
+            print(f"[{e['scenario']:>14}] offered {pt['offered_qps']:>6} "
+                  f"qps: goodput {pt['goodput_qps']:>6} qps, e2e p50/p99 "
+                  f"{pt['e2e_ms_p50']}/{pt['e2e_ms_p99']}ms, queued p99 "
+                  f"{pt['queued_ms_p99']}ms, rejected {pt['rejected']} "
+                  f"({100 * pt['reject_rate']:.1f}%), "
+                  f"late {pt['late_dropped']}")
+    if args.bench_out:
+        p = serving.loadgen.record_sweep(entries, args.bench_out)
+        print(f"merged {len(entries)} load-sweep entries into {p}")
+    return entries, chaos_plan
 
 
 def _probe_users(rec: Recommender, histories, probe: int):
@@ -290,6 +397,38 @@ def main(argv=None):
                          "untouched); the service must retry through them, "
                          "go degraded, and recover — implies "
                          "--rebuild-mid-loop (docs/resilience.md)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="open-loop Poisson load harness: sweep offered "
+                         "QPS through the continuous-batching scheduler "
+                         "instead of draining a fixed request list; "
+                         "records p50/p99 latency, goodput under --slo-ms, "
+                         "reject rate, and batch occupancy per point "
+                         "(docs/serving_scheduler.md)")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="single offered-QPS point for --open-loop "
+                         "(default: the 3-point --sweep)")
+    ap.add_argument("--sweep", type=float, nargs="+", default=None,
+                    metavar="QPS",
+                    help="offered-QPS points for --open-loop (default "
+                         "50 100 200)")
+    ap.add_argument("--slo-ms", type=float, default=250.0,
+                    help="per-request SLO deadline for --open-loop: past "
+                         "it a queued request is late-dropped, a "
+                         "completed one counts as a violation; goodput "
+                         "counts only completions within it")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="seconds of offered load per sweep point")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="scheduler flush timeout: a partial batch waits "
+                         "at most this long for followers")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="bounded admission queue; submissions beyond it "
+                         "are rejected with BackpressureError")
+    ap.add_argument("--bench-out",
+                    default=str(pathlib.Path(__file__).resolve().parents[3]
+                                / "benchmarks" / "BENCH_retrieval.json"),
+                    help="merge --open-loop sweep entries into this BENCH "
+                         "json (pass an empty string to skip recording)")
     ap.add_argument("--recall-threshold", type=float, default=0.7)
     ap.add_argument("--probe", type=int, default=16,
                     help="probe-subset size for the recall oracle")
@@ -350,9 +489,12 @@ def main(argv=None):
     rec.build_index()
     svc = rec.service
     chaos_plan = None
-    if chaos_n > 0:
+    if chaos_n > 0 and not args.open_loop:
         # armed only now: the bootstrap build above ran clean; the first
-        # N mid-loop rebuild attempts die instead and must be retried
+        # N mid-loop rebuild attempts die instead and must be retried.
+        # (--open-loop arms inside the harness instead, after its warm
+        # publish→rebuild cycle, so the injected failures land in the
+        # measured window rather than being eaten by the warm build.)
         chaos_plan = faults.arm(FaultPlan().fail(
             "index.rebuild", calls=range(1, chaos_n + 1)))
     print(f"index built: {store.tokens.shape[0]} news "
@@ -391,11 +533,17 @@ def main(argv=None):
             rec.publish(fresh_ids, fresh)        # O(append) on this path
             svc.rebuild(mode="full", block=False)  # absorb off-path
 
+    sweep_entries = None
     try:
-        results, n_batches = micro_batch_loop(
-            rec, reqs, max_batch=args.batch, on_batch=on_batch)
-        if rebuild_mid_loop:
-            svc.wait_for_build()
+        if args.open_loop:
+            args.rebuild_mid_loop = rebuild_mid_loop   # chaos implies it
+            sweep_entries, chaos_plan = open_loop_harness(
+                args, rec, reqs, chaos_n=chaos_n)
+        else:
+            results, n_batches = micro_batch_loop(
+                rec, reqs, max_batch=args.batch, on_batch=on_batch)
+            if rebuild_mid_loop:
+                svc.wait_for_build()
     finally:
         faults.disarm()          # tests call main() in-process
     if chaos_plan is not None:
@@ -406,6 +554,7 @@ def main(argv=None):
     stats = ServeStats.from_registry(
         recall_at_k=recall, recall_ok=recall >= args.recall_threshold,
         index_kind=args.index, ntotal=svc.ntotal)
+    stats.load_sweep = sweep_entries
     if args.metrics_out:
         obs.tick(force=True)     # final full-registry snapshot
     print(f"{stats.n_requests} requests in {stats.n_batches} batches; "

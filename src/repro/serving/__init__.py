@@ -1,8 +1,10 @@
 # Serving & retrieval: ANN indexes (IVF-Flat / IVF-PQ with Pallas LUT
 # scoring) behind a versioned snapshot lifecycle — immutable IndexSnapshot
 # (the one query object), IndexBuilder (full rebuild + off-path compaction),
-# atomic swap, online delta tier, and the two-stage retrieve->re-rank
-# RetrievalService.
+# atomic swap, online delta tier, the two-stage retrieve->re-rank
+# RetrievalService, and the continuous-batching request front end
+# (RequestScheduler + the open-loop Poisson load harness in loadgen).
+from . import loadgen
 from .builder import IndexBuilder
 from .index import (PAD_ID, FlatIndex, IVFConfig, IVFFlatIndex, IVFPQIndex,
                     make_index)
@@ -11,6 +13,9 @@ from .online import (DeltaBuffer, DeltaOverflowError, DeltaView, hybrid_search,
 from .pq import (PQCodebook, PQConfig, fit_kmeans, kmeans, kmeans_minibatch,
                  opq_train, pq_decode, pq_encode, pq_lut, pq_search, pq_train,
                  sample_rows)
+from .scheduler import (DeadlineExceededError, RequestCancelledError,
+                        RequestScheduler, ScheduledRequest, bucket_for,
+                        pow2_buckets)
 from .service import BackpressureError, RetrievalService, ServiceView
 from .sharded import (ShardedIndexSnapshot, shard_mesh, shard_snapshot,
                       unshard_snapshot)

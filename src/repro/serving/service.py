@@ -81,7 +81,8 @@ class RetrievalService:
                  build_retries: int = 2, build_backoff_s: float = 0.1,
                  build_backoff_factor: float = 2.0,
                  build_backoff_jitter: float = 0.25,
-                 degraded_after_failures: int = 2):
+                 degraded_after_failures: int = 2,
+                 store_grow_chunk: int = 1):
         """builder: IndexBuilder owning (kind, dim, quantizer configs).
         store_emb: [N_global, d] full-precision embeddings keyed by
         global news id (row 0 = pad news, never a candidate).
@@ -99,9 +100,15 @@ class RetrievalService:
         ``build_backoff_jitter``), and ``degraded_after_failures``
         consecutive failures flip the index component of ``health()`` to
         degraded.
+
+        ``store_grow_chunk`` sets the store's capacity-growth
+        granularity (rows): serving front ends that encode users off the
+        device mirror pass a large chunk so small publishes never change
+        the mirror's shape (and so never recompile the user-encode
+        executable on the request path — see ``EmbeddingStore``).
         """
         self.builder = builder
-        self.store = EmbeddingStore(store_emb)
+        self.store = EmbeddingStore(store_emb, grow_chunk=store_grow_chunk)
         self.k = k
         self.k_prime = k_prime or max(4 * k, 32)
         self.auto_compact = auto_compact
@@ -125,6 +132,9 @@ class RetrievalService:
         self._last_build_exc: BaseException | None = None  # shown by health()
         self._build_failures = 0               # consecutive; reset on success
         self._health_last: dict = {}
+        # externally attached components (e.g. the request scheduler's
+        # admission queue): component -> (ok_fn, info_fn)
+        self._extra_health: dict = {}
         self._view = ServiceView(builder.empty(), self.delta.view())
         # lifecycle telemetry: write-path counters are incremented in
         # place; the state gauges are computed-at-collect off the live
@@ -147,7 +157,7 @@ class RetrievalService:
         obs.gauge("health_status", component="delta").set_fn(
             lambda: float(self._delta_ok()))
         obs.gauge("health_status", component="service").set_fn(
-            lambda: float(self._index_ok() and self._delta_ok()))
+            lambda: float(self._service_ok()))
         self._note_health()                    # baseline, no transitions
 
     # ------------------------------------------------------------ reads
@@ -185,13 +195,34 @@ class RetrievalService:
     def _delta_ok(self) -> bool:
         return len(self._view.delta) < self.delta_hard_cap
 
+    def _service_ok(self) -> bool:
+        return (self._index_ok() and self._delta_ok()
+                and all(bool(ok_fn()) for ok_fn, _
+                        in self._extra_health.values()))
+
+    def attach_health(self, component: str, ok_fn, info_fn=None):
+        """Fold an external component into this service's health surface.
+
+        ``ok_fn() -> bool`` is polled by ``health()``, the computed-at-
+        collect ``health_status{component=...}`` gauge, and the
+        transition counters; ``info_fn() -> dict`` (optional) supplies
+        the component's detail block.  The request scheduler uses this
+        (``RequestScheduler.attach_to``) so a saturated admission queue
+        degrades the *service* the same way failing rebuilds or a capped
+        delta tier do — one health contract across the serving tier."""
+        self._extra_health[component] = (ok_fn, info_fn or (lambda: {}))
+        obs.gauge("health_status", component=component).set_fn(
+            lambda: float(bool(ok_fn())))
+        self._note_health()
+
     def _note_health(self):
         """Record component health and count state *transitions* (the
         degraded→healthy edge the chaos smoke asserts on survives in the
         counter even when no metrics snapshot sampled the bad window)."""
-        index_ok, delta_ok = self._index_ok(), self._delta_ok()
-        cur = {"index": index_ok, "delta": delta_ok,
-               "service": index_ok and delta_ok}
+        cur = {"index": self._index_ok(), "delta": self._delta_ok()}
+        for comp, (ok_fn, _) in self._extra_health.items():
+            cur[comp] = bool(ok_fn())
+        cur["service"] = all(cur.values())
         for comp, ok in cur.items():
             prev = self._health_last.get(comp)
             if prev is not None and prev != ok:
@@ -219,7 +250,9 @@ class RetrievalService:
             "delta": {"ok": delta_ok, "size": delta_n,
                       "hard_cap": self.delta_hard_cap},
         }
-        ok = index_ok and delta_ok
+        for comp, (ok_fn, info_fn) in self._extra_health.items():
+            comps[comp] = {"ok": bool(ok_fn()), **info_fn()}
+        ok = all(c["ok"] for c in comps.values())
         return {"status": "healthy" if ok else "degraded", "ok": ok,
                 "components": comps,
                 "snapshot_version": view.snapshot.version,
